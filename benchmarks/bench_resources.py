@@ -1,0 +1,57 @@
+"""Paper Fig. 9 (TCAM vs F1), Fig. 11 (register scaling), Fig. 12
+(bit-precision sweep), Table 1 (feature density)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, splidt_model, windowed
+from repro.core.resources import estimate
+from repro.core.tree import macro_f1
+from repro.flows.windows import quantize_features
+from repro.core.partition import train_partitioned_dt
+
+
+def run(quick: bool = True):
+    rows = []
+    name = "d2"
+    ds, tr, te = dataset(name)
+
+    # Fig 9: TCAM entries vs F1 across model sizes
+    for ps, k in [((3, 3), 2), ((5, 5), 4), ((6, 6), 6), ((5, 5, 5), 6)]:
+        pdt = splidt_model(name, ps, k)
+        _, Xw_te = windowed(name, len(ps))
+        f1 = macro_f1(te.labels, pdt.predict(Xw_te), ds.n_classes)
+        rep = estimate(pdt)
+        rows.append(Row(f"tcam/{name}/ps{len(ps)}k{k}", 0.0,
+                        f"entries={rep.tcam_entries};f1={f1:.3f};"
+                        f"tcam_bits={rep.tcam_bits:.0f}"))
+
+    # Fig 11: register bits vs total features (constant-register claim)
+    for ps, k in [((2, 2), 4), ((4, 4), 4), ((6, 6), 4), ((5, 5, 5), 4)]:
+        pdt = splidt_model(name, ps, k)
+        rep = estimate(pdt)
+        rows.append(Row(f"registers/{name}/ps{ps}k{k}", 0.0,
+                        f"reg_bits={rep.register_bits_per_flow};"
+                        f"total_features={len(pdt.unique_features())};"
+                        f"capacity={rep.flow_capacity}"))
+
+    # Table 1: feature density per partition / subtree
+    pdt = splidt_model(name, (5, 5, 5), 6)
+    per_part, per_sub = pdt.feature_density()
+    rows.append(Row(f"density/{name}", 0.0,
+                    f"per_partition_pct={per_part:.1f};"
+                    f"per_subtree_pct={per_sub:.1f};"
+                    f"n_subtrees={len(pdt.subtrees)}"))
+
+    # Fig 12: bit precision sweep
+    Xw_tr, Xw_te = windowed(name, 2)
+    for bits in (32, 16, 8):
+        q_tr = quantize_features(Xw_tr, bits)
+        q_te = quantize_features(Xw_te, bits)
+        pdt = train_partitioned_dt(q_tr, tr.labels, partition_sizes=[5, 5],
+                                   k=4, n_classes=ds.n_classes)
+        f1 = macro_f1(te.labels, pdt.predict(q_te), ds.n_classes)
+        rep = estimate(pdt, bits=bits)
+        rows.append(Row(f"precision/{name}/{bits}b", 0.0,
+                        f"f1={f1:.3f};capacity={rep.flow_capacity}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by `python -m
+repro.launch.dryrun --all`) and emits one row per single-pod cell with
+the three terms, the bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def run(quick: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*__16x16.json"))):
+        rec = json.load(open(path))
+        cell = f"{rec['arch']}/{rec['shape']}"
+        if rec.get("status") == "skipped":
+            rows.append(Row(f"roofline/{cell}", 0.0, "skipped"))
+            continue
+        r = rec.get("roofline")
+        if not r:
+            continue
+        rows.append(Row(
+            f"roofline/{cell}", 0.0,
+            f"t_compute={r['t_compute_s']:.4f};t_memory={r['t_memory_s']:.4f};"
+            f"t_collective={r['t_collective_s']:.4f};"
+            f"bound={r['bottleneck']};"
+            f"useful_frac={r['useful_flops_fraction']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f}"))
+    if not rows:
+        rows.append(Row("roofline/none", 0.0,
+                        "run `python -m repro.launch.dryrun --all` first"))
+    return rows

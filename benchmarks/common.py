@@ -1,0 +1,53 @@
+"""Shared benchmark plumbing: datasets, timing, CSV rows."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str     # free-form "key=value;key=value" payload
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw) -> tuple[Any, float]:
+    out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, n_flows: int = 2500):
+    from repro.flows.synthetic import make_dataset
+    ds = make_dataset(name, n_flows=n_flows)
+    return ds, *ds.split()
+
+
+@functools.lru_cache(maxsize=None)
+def windowed(name: str, p: int, n_flows: int = 2500):
+    from repro.flows.windows import window_features
+    ds, tr, te = dataset(name, n_flows)
+    return window_features(tr, p), window_features(te, p)
+
+
+@functools.lru_cache(maxsize=None)
+def splidt_model(name: str, ps: tuple, k: int, n_flows: int = 2500,
+                 max_dep: int | None = None):
+    from repro.core.partition import train_partitioned_dt
+    ds, tr, te = dataset(name, n_flows)
+    Xw_tr, _ = windowed(name, len(ps), n_flows)
+    return train_partitioned_dt(Xw_tr, tr.labels, partition_sizes=list(ps),
+                                k=k, n_classes=ds.n_classes,
+                                max_dep_depth=max_dep)

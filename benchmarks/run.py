@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only pareto,...]
+
+Modules map to the paper's tables/figures:
+    bench_pareto      — Fig 6 / Table 3 (F1 vs flows, SpliDT vs NB/Leo)
+    bench_resources   — Fig 9 (TCAM), Fig 11 (registers), Fig 12
+                        (precision), Table 1 (feature density)
+    bench_recirc_ttd  — Table 5 (recirc bandwidth), Fig 10 (TTD)
+    bench_dse         — Fig 7 (BO convergence), Table 4 (stage timing)
+    bench_kernels     — kernel + engine micro-benchmarks
+    bench_roofline    — EXPERIMENTS.md §Roofline table (from dry-run)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["pareto", "resources", "recirc_ttd", "dse", "kernels", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full dataset/table sizes (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in MODULES:
+        if only and mod not in only:
+            continue
+        t0 = time.time()
+        try:
+            m = __import__(f"benchmarks.bench_{mod}", fromlist=["run"])
+            for row in m.run(quick=not args.full):
+                print(row.csv(), flush=True)
+            print(f"# bench_{mod} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures.append(mod)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

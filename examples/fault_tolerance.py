@@ -1,0 +1,51 @@
+"""Fault-tolerance demo: training with simulated hard failures, async
+checkpointing, exactly-once recovery, and straggler detection.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.tokens import TokenPipeline
+from repro.distributed import pspec
+from repro.models import model_zoo
+from repro.train.elastic import StepWatchdog, run_with_recovery
+from repro.train.optimizer import AdamW
+from repro.train.train_step import make_train_step
+
+
+def main():
+    cfg = get_arch("granite-3-2b").reduced()
+    zoo = model_zoo.get_model(cfg)
+    params = pspec.init_params(zoo.param_defs(cfg), jax.random.key(0))
+    opt = AdamW(lr=3e-3)
+    state = opt.init(params)
+    raw = make_train_step(cfg, opt)
+    jit_step = jax.jit(lambda s, b: raw(s, b, None)[:2])
+
+    pipe = TokenPipeline(cfg.vocab, batch=4, seq=32)
+    batches = [
+        {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        for i in range(24)
+    ]
+    root = tempfile.mkdtemp(prefix="ft_demo_")
+    wd = StepWatchdog(on_straggler=lambda s, dt, ema: print(
+        f"  [watchdog] straggler at step {s}: {dt:.2f}s vs ema {ema:.2f}s"))
+    print("training 24 steps with failures injected after steps 9 and 17…")
+    state, rep = run_with_recovery(
+        jit_step, state, batches, ckpt_root=root, ckpt_every=4,
+        fail_at={9, 17}, watchdog=wd)
+    print(f"failures={rep.failures} restores={rep.restores} "
+          f"steps_run={rep.steps_run} (includes replay) "
+          f"final_step={rep.final_step}")
+    assert rep.final_step == 24 and rep.restores == 2
+    print("ACCEPTANCE: recovered to exactly step 24 through 2 failures OK")
+    shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serving example: continuous batching over a fixed cache-slot pool —
+the LM-side incarnation of SpliDT's register reuse (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_launch
+
+
+def main():
+    stats = serve_launch.main([
+        "--arch", "granite-3-2b", "--slots", "3", "--requests", "9",
+        "--max-new", "12",
+    ])
+    assert stats.completed == 9
+    print("ACCEPTANCE: all requests served through the fixed slot pool OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end training driver: a ~100M-parameter tinyllama-family model
+trained for a few hundred steps on the synthetic Markov stream, with
+async checkpointing and the step watchdog.
+
+    PYTHONPATH=src python examples/train_lm.py           # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --quick   # tiny, 40 steps
+
+Acceptance: final loss well below the uniform floor log(vocab), i.e. the
+model learned the Markov structure end-to-end through the full stack
+(data pipeline -> sharded step -> AdamW -> checkpointing).
+"""
+import argparse
+import sys
+
+import numpy as np
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.quick:
+        argv = ["--arch", "tinyllama-1.1b", "--reduced",
+                "--steps", str(args.steps or 40), "--batch", "8",
+                "--seq", "64", "--lr", "1e-2", "--ckpt-dir", "/tmp/lm_ckpt"]
+    else:
+        # ~100M params: d_model 640, 12 layers, vocab 32000
+        argv = ["--arch", "tinyllama-1.1b", "--d-model", "640",
+                "--layers", "12", "--steps", str(args.steps or 200),
+                "--batch", "4", "--seq", "256", "--lr", "3e-3",
+                "--ckpt-dir", "/tmp/lm_ckpt", "--microbatches", "2"]
+    losses = train_launch.main(argv)
+    floor = np.log(256 if args.quick else 32000)
+    final = float(np.mean(losses[-10:]))
+    print(f"ACCEPTANCE: final loss {final:.3f} vs uniform floor "
+          f"{floor:.3f}: {'OK' if final < floor else 'needs more steps'}")
+
+
+if __name__ == "__main__":
+    main()

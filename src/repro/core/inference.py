@@ -1,0 +1,74 @@
+"""The partitioned-inference engine (paper Fig. 4, TPU-native).
+
+Orchestrates the two data-plane phases per partition window:
+  1. Feature Collection & Engineering — ``kernels.ops.feature_window``
+     fills the k registers for each flow's active subtree;
+  2. Subtree Model Prediction — ``kernels.ops.dt_traverse`` range-marks
+     the registers and emits the action (next SID or exit class).
+Between partitions the engine performs the "recirculation": SID update +
+register reset, counted per flow for the bandwidth model.
+
+The engine must agree exactly with :meth:`PartitionedDT.predict` (the
+offline numpy oracle); a property test enforces this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import PartitionedDT
+from repro.core.range_tables import RangeExecTables, pack_range_exec
+from repro.core.tables import PackedTables, pack_tables
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class EngineResult:
+    labels: np.ndarray           # (B,) predicted class per flow
+    recircs: np.ndarray          # (B,) partition transitions (control pkts)
+    exit_partition: np.ndarray   # (B,)
+    regs_trace: list[np.ndarray] # per-partition register snapshots
+
+
+@dataclasses.dataclass
+class Engine:
+    tables: PackedTables
+    ret: RangeExecTables
+    impl: str = "auto"
+
+    @classmethod
+    def from_model(cls, pdt: PartitionedDT, impl: str = "auto") -> "Engine":
+        return cls(tables=pack_tables(pdt), ret=pack_range_exec(pdt), impl=impl)
+
+    def run(self, win_pkts: np.ndarray) -> EngineResult:
+        """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``."""
+        B, P = win_pkts.shape[0], win_pkts.shape[1]
+        if P < self.tables.n_partitions:
+            raise ValueError("fewer windows than partitions")
+        S = self.ret.n_subtrees
+        sid = jnp.zeros(B, jnp.int32)
+        done = np.zeros(B, dtype=bool)
+        labels = np.zeros(B, dtype=np.int64)
+        recircs = np.zeros(B, dtype=np.int64)
+        exit_partition = np.zeros(B, dtype=np.int64)
+        regs_trace: list[np.ndarray] = []
+
+        for p in range(self.tables.n_partitions):
+            pkts = jnp.asarray(win_pkts[:, p])
+            regs = ops.feature_window(pkts, sid, self.tables, impl=self.impl)
+            regs_trace.append(np.asarray(regs))
+            action = np.asarray(ops.dt_traverse(regs, sid, self.ret,
+                                                impl=self.impl))
+            is_exit = action >= S
+            active = ~done
+            exiting = active & is_exit
+            labels[exiting] = action[exiting] - S
+            exit_partition[exiting] = p
+            done |= exiting
+            cont = active & ~is_exit
+            recircs[cont] += 1           # one control packet per transition
+            # "recirculation": update SID register, reset feature registers
+            sid = jnp.where(jnp.asarray(cont), jnp.asarray(action), sid)
+        return EngineResult(labels, recircs, exit_partition, regs_trace)

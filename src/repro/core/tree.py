@@ -1,0 +1,303 @@
+"""Histogram-based CART decision-tree trainer (pure numpy).
+
+Scikit-learn is unavailable offline, so SpliDT's subtree learner is
+implemented from scratch: quantile-binned features + per-node class
+histograms, Gini-gain splits, and -- the SpliDT-specific part -- a hard
+budget of at most ``k`` *distinct* features per tree (paper §2.2
+"feature density": every subtree must fit in the k feature-register
+slots).  Once a branch has consumed k distinct features, further splits
+on that branch may only reuse those features.
+
+The tree is stored as flat arrays so it can be packed for the JAX/Pallas
+engine (``core/tables.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MAX_BINS = 64  # quantile bins per feature
+
+
+@dataclasses.dataclass
+class Tree:
+    """Flat-array binary decision tree.
+
+    Node 0 is the root.  For internal nodes ``feature/threshold`` define
+    ``x[feature] <= threshold -> left else right``.  Leaves have
+    ``feature == -1`` and carry a class distribution.
+    """
+
+    feature: np.ndarray      # (n_nodes,) int32, -1 for leaf
+    threshold: np.ndarray    # (n_nodes,) float32
+    left: np.ndarray         # (n_nodes,) int32
+    right: np.ndarray        # (n_nodes,) int32
+    value: np.ndarray        # (n_nodes, n_classes) float32 class counts
+    n_classes: int
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int((self.feature < 0).sum())
+
+    @property
+    def max_depth(self) -> int:
+        depth = np.zeros(self.n_nodes, dtype=np.int32)
+        for i in range(self.n_nodes):      # parents precede children
+            if self.feature[i] >= 0:
+                depth[self.left[i]] = depth[i] + 1
+                depth[self.right[i]] = depth[i] + 1
+        return int(depth.max(initial=0))
+
+    def used_features(self) -> np.ndarray:
+        f = self.feature[self.feature >= 0]
+        return np.unique(f)
+
+    def thresholds_per_feature(self) -> dict[int, np.ndarray]:
+        out: dict[int, np.ndarray] = {}
+        for fid in self.used_features():
+            thr = self.threshold[self.feature == fid]
+            out[int(fid)] = np.unique(thr.astype(np.float32))
+        return out
+
+    def apply(self, X: np.ndarray) -> np.ndarray:
+        """Leaf index for each row of ``X`` (n, n_features)."""
+        n = X.shape[0]
+        node = np.zeros(n, dtype=np.int32)
+        active = self.feature[node] >= 0
+        while active.any():
+            idx = np.nonzero(active)[0]
+            nd = node[idx]
+            f = self.feature[nd]
+            thr = self.threshold[nd]
+            go_left = X[idx, f] <= thr
+            node[idx] = np.where(go_left, self.left[nd], self.right[nd])
+            active = self.feature[node] >= 0
+        return node
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        leaves = self.apply(X)
+        v = self.value[leaves]
+        s = v.sum(axis=1, keepdims=True)
+        return v / np.maximum(s, 1e-9)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return self.value[self.apply(X)].argmax(axis=1)
+
+
+def _quantile_bins(X: np.ndarray, max_bins: int) -> list[np.ndarray]:
+    """Per-feature ascending candidate thresholds (bin edges)."""
+    edges = []
+    qs = np.linspace(0, 1, max_bins + 1)[1:-1]
+    for j in range(X.shape[1]):
+        col = X[:, j]
+        e = np.unique(np.quantile(col, qs, method="lower").astype(np.float32))
+        edges.append(e)
+    return edges
+
+
+def _bin_data(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
+    """Map raw features to bin ids: bin b means value <= edges[b] fails for
+    all earlier edges; i.e. ``np.searchsorted(edges, x, 'left')``."""
+    n, m = X.shape
+    B = np.empty((n, m), dtype=np.int16)
+    for j in range(m):
+        B[:, j] = np.searchsorted(edges[j], X[:, j], side="left")
+    return B
+
+
+def _gini_gain_curves(hist: np.ndarray, total: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Best split position & impurity decrease for one feature.
+
+    ``hist``: (n_bins, n_classes) class counts per bin; ``total``:
+    (n_classes,).  Split at edge e sends bins [0..e] left.  Returns
+    (best_edge_index, best_gain); gain is -inf if no valid split.
+    """
+    cum = np.cumsum(hist, axis=0)            # (n_bins, C) left counts
+    nl = cum.sum(axis=1)                      # (n_bins,)
+    n = total.sum()
+    nr = n - nl
+    valid = (nl > 0) & (nr > 0)
+    # weighted Gini of children; parent impurity constant per node
+    sl = (cum.astype(np.float64) ** 2).sum(axis=1)
+    right = total[None, :] - cum
+    sr = (right.astype(np.float64) ** 2).sum(axis=1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        child = (nl - sl / np.maximum(nl, 1)) + (nr - sr / np.maximum(nr, 1))
+    child = np.where(valid, child, np.inf)
+    e = int(np.argmin(child))
+    if not valid[e]:
+        return -1, -np.inf
+    parent = n - (total.astype(np.float64) ** 2).sum() / max(n, 1)
+    return e, float(parent - child[e])
+
+
+@dataclasses.dataclass
+class _BuildNode:
+    rows: np.ndarray
+    depth: int
+    used: frozenset
+    parent: int
+    is_left: bool
+
+
+def train_tree(
+    X: np.ndarray,
+    y: np.ndarray,
+    *,
+    max_depth: int,
+    k_features: int | None = None,
+    allowed_features: np.ndarray | None = None,
+    n_classes: int | None = None,
+    min_samples_leaf: int = 4,
+    min_gain: float = 1e-7,
+    max_bins: int = MAX_BINS,
+    rng: np.random.Generator | None = None,
+) -> Tree:
+    """Train a CART tree with an optional distinct-feature budget.
+
+    ``k_features``: max distinct features on any root-to-leaf path *and*
+    in the whole tree (SpliDT subtree register budget).  Enforced
+    greedily: after k distinct features have been used anywhere in the
+    tree, only those features remain candidates.  ``allowed_features``
+    restricts candidates up-front (used for the top-k baselines).
+    """
+    X = np.asarray(X, dtype=np.float32)
+    y = np.asarray(y, dtype=np.int64)
+    n, m = X.shape
+    C = int(n_classes if n_classes is not None else y.max() + 1)
+    if allowed_features is None:
+        allowed = np.arange(m)
+    else:
+        allowed = np.asarray(allowed_features, dtype=np.int64)
+
+    edges = _quantile_bins(X, max_bins)
+    B = _bin_data(X, edges)
+
+    feature: list[int] = []
+    threshold: list[float] = []
+    left: list[int] = []
+    right: list[int] = []
+    value: list[np.ndarray] = []
+
+    def new_node() -> int:
+        feature.append(-1)
+        threshold.append(0.0)
+        left.append(-1)
+        right.append(-1)
+        value.append(np.zeros(C, dtype=np.float32))
+        return len(feature) - 1
+
+    # global distinct-feature budget, grown greedily as the tree is built
+    tree_used: set[int] = set()
+
+    stack = [_BuildNode(np.arange(n), 0, frozenset(), -1, False)]
+    root = None
+    while stack:
+        nd = stack.pop()
+        node_id = new_node()
+        if root is None:
+            root = node_id
+        if nd.parent >= 0:
+            if nd.is_left:
+                left[nd.parent] = node_id
+            else:
+                right[nd.parent] = node_id
+        rows = nd.rows
+        counts = np.bincount(y[rows], minlength=C).astype(np.float32)
+        value[node_id] = counts
+        pure = (counts > 0).sum() <= 1
+        if nd.depth >= max_depth or pure or rows.shape[0] < 2 * min_samples_leaf:
+            continue
+
+        # candidate features under the budget
+        if k_features is not None and len(tree_used) >= k_features:
+            cand = np.asarray(sorted(tree_used), dtype=np.int64)
+        else:
+            cand = allowed
+        cand = cand[[len(edges[int(j)]) > 0 for j in cand]]
+        if cand.size == 0:
+            continue
+
+        yb = y[rows]
+        total = np.bincount(yb, minlength=C).astype(np.int64)
+        best = (-np.inf, -1, -1)  # gain, feature, edge
+        for j in cand:
+            j = int(j)
+            nb = len(edges[j]) + 1
+            bj = B[rows, j].astype(np.int64)
+            hist = np.zeros((nb, C), dtype=np.int64)
+            np.add.at(hist, (bj, yb), 1)
+            e, gain = _gini_gain_curves(hist, total)
+            if gain > best[0]:
+                best = (gain, j, e)
+        gain, j, e = best
+        if j < 0 or gain <= min_gain:
+            continue
+        thr = float(edges[j][e])
+        go_left = X[rows, j] <= thr
+        nl = int(go_left.sum())
+        if nl < min_samples_leaf or rows.shape[0] - nl < min_samples_leaf:
+            continue
+
+        feature[node_id] = j
+        threshold[node_id] = thr
+        tree_used.add(j)
+        used = nd.used | {j}
+        # push right first so left is materialised first (stable ids)
+        stack.append(_BuildNode(rows[~go_left], nd.depth + 1, used, node_id, False))
+        stack.append(_BuildNode(rows[go_left], nd.depth + 1, used, node_id, True))
+
+    return Tree(
+        feature=np.asarray(feature, dtype=np.int32),
+        threshold=np.asarray(threshold, dtype=np.float32),
+        left=np.asarray(left, dtype=np.int32),
+        right=np.asarray(right, dtype=np.int32),
+        value=np.stack(value).astype(np.float32),
+        n_classes=C,
+    )
+
+
+def feature_importance(X: np.ndarray, y: np.ndarray, *, max_depth: int = 12,
+                       n_classes: int | None = None) -> np.ndarray:
+    """Impurity-based importances from one unconstrained tree (used by the
+    top-k baselines to pick their global feature set)."""
+    t = train_tree(X, y, max_depth=max_depth, n_classes=n_classes)
+    imp = np.zeros(X.shape[1], dtype=np.float64)
+    totals = t.value.sum(axis=1)
+
+    def gini(v):
+        s = v.sum()
+        if s <= 0:
+            return 0.0
+        p = v / s
+        return 1.0 - (p ** 2).sum()
+
+    for i in range(t.n_nodes):
+        f = t.feature[i]
+        if f < 0:
+            continue
+        l, r = t.left[i], t.right[i]
+        w, wl, wr = totals[i], totals[l], totals[r]
+        imp[f] += w * gini(t.value[i]) - wl * gini(t.value[l]) - wr * gini(t.value[r])
+    s = imp.sum()
+    return imp / s if s > 0 else imp
+
+
+def macro_f1(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> float:
+    """Macro-averaged F1 (paper's headline metric)."""
+    f1s = []
+    for c in range(n_classes):
+        tp = int(((y_pred == c) & (y_true == c)).sum())
+        fp = int(((y_pred == c) & (y_true != c)).sum())
+        fn = int(((y_pred != c) & (y_true == c)).sum())
+        if tp + fp + fn == 0:
+            continue
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(0.0 if prec + rec == 0 else 2 * prec * rec / (prec + rec))
+    return float(np.mean(f1s)) if f1s else 0.0

@@ -1,0 +1,161 @@
+"""Parameter definitions with logical sharding axes.
+
+Every model declares its parameters once as a tree of :class:`ParamDef`
+(shape + per-dim *logical* axis names + init).  From that single source
+of truth we derive:
+  * materialised parameters (``init_params``),
+  * ``jax.sharding.PartitionSpec`` trees (``resolve_specs``) under a
+    rule set mapping logical axes -> mesh axes, with automatic
+    divisibility fallback (a dim that doesn't divide its mesh axis is
+    replicated -- e.g. 4 KV heads on a 16-way model axis),
+  * ``ShapeDtypeStruct`` trees for AOT lowering (``abstract_params``).
+
+Logical axes used across the zoo:
+  vocab, embed, mlp, heads, kv, head_dim, expert, expert_mlp, lora,
+  state, conv, frames
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Logical = tuple[str | None, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: Logical
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float | None = None  # stddev override (default fan-in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# rules: logical axis -> mesh axis (or tuple of mesh axes)
+# The production mesh is ("data", "model"); "pod" stays pure-DP so params
+# are replicated across pods.  "embed" riding the data axis is the FSDP
+# (ZeRO-3) dimension: weights are all-gathered per-layer on use.
+DEFAULT_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "embed": "data",
+    "mlp": "model",
+    "heads": "model",
+    "kv": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "head_dim": None,
+    "lora": None,
+    "state": None,
+    "conv": None,
+    "frames": None,
+    "layers": None,
+}
+
+# §Perf train layout for DENSE archs (EXPERIMENTS.md): fully-sharded
+# (ZeRO-3 over both mesh axes), no tensor parallelism.  At train_4k's
+# 1M-token global batch the per-layer activation all-reduces of TP cost
+# ~4x more wire than per-layer weight all-gathers, so FSDP-2D wins.
+FSDP2D_RULES: dict[str, Any] = dict(
+    DEFAULT_RULES,
+    embed=("data", "model"), vocab=None, mlp=None, heads=None, kv=None,
+)
+
+# §Perf serve layout: weights fully resident (NO per-token FSDP
+# gathers) — TP over "model", replicated over "data"; MoE experts live
+# whole on their EP shard with d_ff sharded over "data" so DeepSeek's
+# 222B of expert weights fit (bf16).
+SERVE_RULES: dict[str, Any] = dict(
+    DEFAULT_RULES,
+    embed=None, expert="model", expert_mlp="data",
+)
+
+
+def _axis_size(mesh_shape: dict[str, int], axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh_shape.get(a, 1) for a in axis]))
+    return mesh_shape.get(axis, 1)
+
+
+def resolve_spec(d: ParamDef, mesh_shape: dict[str, int],
+                 rules: dict[str, Any] | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    out = []
+    for dim, name in zip(d.shape, d.logical):
+        axis = rules.get(name) if name else None
+        if axis is not None and dim % _axis_size(mesh_shape, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def resolve_specs(defs, mesh_shape: dict[str, int],
+                  rules: dict[str, Any] | None = None):
+    return jax.tree.map(
+        lambda d: resolve_spec(d, mesh_shape, rules), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def abstract_params(defs, dtype=None):
+    """ShapeDtypeStruct tree; ``dtype`` overrides float leaves (bf16
+    weights for serving)."""
+    def mk(d: ParamDef):
+        dt = d.dtype
+        if dtype is not None and jnp.issubdtype(dt, jnp.floating):
+            dt = dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return jax.tree.map(mk, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def init_params(defs, key: jax.Array):
+    """Materialise parameters (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, d.dtype)
+                    * (d.scale if d.scale is not None else 0.02))
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else fan_in ** -0.5
+        return jax.random.normal(k, d.shape, d.dtype) * scale
+
+    return jax.tree.unflatten(treedef, [mk(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_bytes(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(int(np.prod(d.shape)) * np.dtype(d.dtype).itemsize
+               for d in leaves)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def stack_defs(d: ParamDef, n: int) -> ParamDef:
+    """Stack a per-layer def across ``n`` scanned layers."""
+    return dataclasses.replace(
+        d, shape=(n,) + d.shape, logical=("layers",) + d.logical)
+
+
+def stack_tree(defs, n: int):
+    return jax.tree.map(lambda d: stack_defs(d, n), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,0 +1,2 @@
+from repro.flows.synthetic import FlowDataset, make_dataset  # noqa: F401
+from repro.flows.windows import window_features, full_flow_features  # noqa: F401

@@ -1,0 +1,134 @@
+"""CICFlowMeter-style windowed feature extraction.
+
+The paper modifies CICFlowMeter to emit feature statistics at every
+window boundary and reset flow state afterwards (§5 Dataset Generation).
+This module is the offline analogue: it slices each flow into ``p``
+uniform windows (the data plane parses the flow size from the transport
+header -- Homa/NDP style -- to know the boundaries) and computes the full
+N-feature vector per window.
+
+Window semantics mirror the data plane exactly:
+  * windows are uniform: ``len // p`` packets, remainder to the LAST
+    window (so every window is non-empty for flows with len >= p);
+  * the dependency chain is cleared at each window boundary, so the
+    first packet of every window has IAT = 0;
+  * padding packets have valid = 0 and contribute to nothing;
+  * features are computed with the SAME f32 kernel math as the runtime
+    engine (``kernels.ref.feature_window_ref``), so training-time
+    thresholds and inference-time register values agree bit-exactly --
+    the switch analogue is that CICFlowMeter and the pipeline both see
+    integer registers.  ``core.features.compute_feature`` remains the
+    independent (f64 numpy) semantic oracle for unit tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import (
+    FEATURE_TABLE, N_FEATURES, PKT_IAT, PKT_NFIELDS, PKT_VALID, REGISTRY,
+)
+from repro.flows.synthetic import FlowDataset
+from repro.kernels.ref import feature_window_ref
+
+_FLOW_BATCH = 2048
+
+
+def window_bounds(length: int, p: int) -> list[tuple[int, int]]:
+    """Uniform window [start, end) bounds; remainder goes to last window."""
+    base = max(length // p, 1)
+    bounds = []
+    for w in range(p):
+        lo = min(w * base, length)
+        hi = length if w == p - 1 else min((w + 1) * base, length)
+        bounds.append((lo, hi))
+    return bounds
+
+
+def _all_feature_rows(n: int) -> tuple[jnp.ndarray, ...]:
+    """Slot tables covering ALL registry features (k = N_FEATURES)."""
+    op = np.tile(FEATURE_TABLE[:, 0], (n, 1))
+    field = np.tile(FEATURE_TABLE[:, 1], (n, 1))
+    pred = np.tile(FEATURE_TABLE[:, 2], (n, 1))
+    init = np.tile(np.asarray([s.init_value for s in REGISTRY], np.float32),
+                   (n, 1))
+    return (jnp.asarray(op), jnp.asarray(field), jnp.asarray(pred),
+            jnp.asarray(init))
+
+
+def _features_jnp(win: np.ndarray) -> np.ndarray:
+    """(m, W, F) window packets -> (m, N_FEATURES) via the engine's math."""
+    m = win.shape[0]
+    out = np.empty((m, N_FEATURES), dtype=np.float32)
+    for lo in range(0, m, _FLOW_BATCH):
+        hi = min(lo + _FLOW_BATCH, m)
+        rows = _all_feature_rows(hi - lo)
+        out[lo:hi] = np.asarray(
+            feature_window_ref(jnp.asarray(win[lo:hi]), *rows))
+    return out
+
+
+def window_features(ds: FlowDataset, p: int) -> np.ndarray:
+    """Per-window features: returns ``(n_flows, p, N_FEATURES)``.
+
+    Computed from the exact same padded window tensor the runtime engine
+    consumes, so offline (training) features and runtime registers are
+    bit-identical.
+    """
+    wp = window_packets(ds, p)                   # (n, p, W, F)
+    n = ds.n_flows
+    out = np.zeros((n, p, N_FEATURES), dtype=np.float32)
+    for w in range(p):
+        out[:, w] = _features_jnp(wp[:, w])
+    return out
+
+
+def window_packets(ds: FlowDataset, p: int) -> np.ndarray:
+    """Window-major packet tensor for the data-plane engine.
+
+    Returns ``(n_flows, p, W_max, PKT_NFIELDS)`` with per-window padding
+    (valid=0) and the dependency chain cleared at window starts
+    (first-packet IAT = 0), matching :func:`window_features` semantics.
+    """
+    n = ds.n_flows
+    w_max = 1
+    for L in np.unique(ds.lengths):
+        for lo, hi in window_bounds(int(L), p):
+            w_max = max(w_max, hi - lo)
+    out = np.zeros((n, p, w_max, PKT_NFIELDS), dtype=np.float32)
+    for L in np.unique(ds.lengths):
+        rows = np.nonzero(ds.lengths == L)[0]
+        pk = ds.packets[rows]
+        for w, (lo, hi) in enumerate(window_bounds(int(L), p)):
+            if hi <= lo:
+                continue
+            win = pk[:, lo:hi].copy()
+            win[:, 0, PKT_IAT] = 0.0
+            out[rows, w, :hi - lo] = win
+    return out
+
+
+def full_flow_features(ds: FlowDataset) -> np.ndarray:
+    """Whole-flow features (the one-shot baselines' best case)."""
+    return window_features(ds, 1)[:, 0, :]
+
+
+def quantize_features(X: np.ndarray, bits: int) -> np.ndarray:
+    """Reduce feature bit precision (paper Fig. 12).
+
+    Features are stored in ``bits``-wide registers.  Counters and sums
+    are heavy-tailed, so narrow registers hold them LOG-encoded (switch
+    ASICs implement this with a leading-zero/priority encoder, the same
+    primitive range marking uses): q = round(log1p(x - min) * scale).
+    Linear 8-bit quantisation would collapse the low-magnitude range
+    where most of the discrimination lives.
+    """
+    if bits >= 32:
+        return X
+    lo = X.min(axis=tuple(range(X.ndim - 1)), keepdims=True)
+    y = np.log1p(np.maximum(X - lo, 0.0))
+    hi = y.max(axis=tuple(range(X.ndim - 1)), keepdims=True)
+    span = np.maximum(hi, 1e-9)
+    levels = float(2 ** bits - 1)
+    q = np.round(y / span * levels)
+    return (np.expm1(q / levels * span) + lo).astype(np.float32)

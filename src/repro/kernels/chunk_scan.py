@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: chunked gated linear recurrence (GLA / SSD family).
+
+Serves RWKV6 (per-channel data-dependent decay + bonus ``u``) and
+Mamba2-SSD (scalar decay broadcast over channels), and powers the
+``long_500k`` decode path.  This is the LM-side incarnation of SpliDT's
+insight (DESIGN.md §2): sequences are processed in *windows* (chunks)
+with a bounded carried state that is re-used across windows — intra-chunk
+work is dense MXU compute, the inter-chunk state handoff is the
+"recirculation".
+
+Recurrence (per head):   S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    GLA form:            o_t = q_t S_t
+    bonus (RWKV6) form:  o_t = q_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Grid: (batch*heads, T // C).  TPU iterates the chunk axis sequentially,
+so the running state lives in a VMEM scratch accumulator across grid
+steps (initialised at chunk 0, final state emitted every step — last
+write wins).  VMEM per step: 4 chunk blocks (C, d) + state (dk, dv)
+(~0.2 MB at C=128, d=128, f32).
+
+Numerics: the intra-chunk ratio trick ``k / exp(cum)`` is clipped at
+exp(30); with C=128 this is safe for per-step decay >= exp(-30/128) —
+far below any decay RWKV6/Mamba2 parameterisations produce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sout_ref,
+            state, *, use_bonus: bool):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    q = q_ref[0].astype(jnp.float32)            # (C, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # (C, dv)
+    w = w_ref[0].astype(jnp.float32)            # (C, dk)
+    S = state[...]                              # (dk, dv)
+    C = q.shape[0]
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)              # (C, dk) inclusive
+    total = cum[-1, :]                          # (dk,)
+
+    # centre the log-decay reference at mid-chunk: pairwise products only
+    # need DIFFERENCES of cum, so subtracting m halves the exponent range
+    # (safe for per-step decay >= exp(-90/C); see module docstring)
+    m = cum[C // 2, :]                          # (dk,)
+    cum_q = cum - logw if use_bonus else cum
+    q_in = q * jnp.exp(jnp.clip(cum_q - m[None, :], -45.0, 45.0))
+    k_in = k * jnp.exp(jnp.clip(m[None, :] - cum, -45.0, 45.0))
+    att = jax.lax.dot_general(
+        q_in, k_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (C, C)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    mask = (si < ti) if use_bonus else (si <= ti)
+    att = jnp.where(mask, att, 0.0)
+    o = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if use_bonus:
+        u = u_ref[0].astype(jnp.float32)        # (dk,)
+        diag = (q * u[None, :] * k).sum(axis=1)  # (C,)
+        o = o + diag[:, None] * v
+    # inter-chunk: TRUE decay from chunk start (uncentred; underflow ok)
+    q_state = q * jnp.exp(cum_q)
+    o = o + jax.lax.dot_general(q_state, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    d_out = jnp.exp(total[None, :] - cum)       # (C, dk)
+    new_S = jnp.exp(total)[:, None] * S + jax.lax.dot_general(
+        k * d_out, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    state[...] = new_S
+    o_ref[0] = o.astype(o_ref.dtype)
+    sout_ref[0] = new_S                          # last chunk's write wins
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_bonus", "interpret"))
+def chunk_scan_pallas(
+    q: jnp.ndarray,        # (B, T, dk)
+    k: jnp.ndarray,        # (B, T, dk)
+    v: jnp.ndarray,        # (B, T, dv)
+    decay: jnp.ndarray,    # (B, T, dk) in (0, 1]
+    bonus: jnp.ndarray,    # (B, dk)  (ignored unless use_bonus)
+    state: jnp.ndarray,    # (B, dk, dv) initial state, f32
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    use_bonus: bool = False,
+    interpret: bool = True,
+):
+    """Returns (o (B, T, dv), final_state (B, dk, dv))."""
+    B, T, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk, T)
+    assert T % C == 0, f"T={T} must be a multiple of chunk={C}"
+    nC = T // C
+    grid = (B, nC)
+    kernel = functools.partial(_kernel, use_bonus=use_bonus)
+    o, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, dv), v.dtype),
+            jax.ShapeDtypeStruct((B, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pl.tpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pl.tpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(q, k, v, decay, bonus, state)
+    return o, s_out

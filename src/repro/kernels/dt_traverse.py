@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: partitioned-subtree range-mark matching.
+
+The Subtree Model Prediction phase (paper §3.1.2) as dense TPU compute.
+Rather than pointer-chasing the tree (hostile to the VPU), we execute
+the *range-marking* semantics the switch itself uses:
+
+    marks  = #{threshold < register}   per slot     (compare + reduce)
+    hit(l) = marks within leaf l's per-slot interval (dense match)
+    action = first hit (TCAM priority encode)
+
+Flows are grouped by SID outside the kernel (MoE-dispatch style: sort by
+SID, pad each segment to the flow-block size) and the grid prefetches a
+``block_sid`` map so each grid step streams ONE subtree's threshold and
+leaf tables into VMEM alongside its flow block — the TPU analogue of the
+switch activating one subtree's MAT entries per pipeline pass.
+
+VMEM per step: regs (Bb, k) + thresholds (k, T) + leaf tables (L, k) x2
++ actions (L,) — a few tens of KB at Bb=128, k<=8, T,L<=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_B = 128
+
+
+def _kernel(block_sid_ref, regs_ref, thr_ref, lo_ref, hi_ref, act_ref,
+            valid_ref, out_ref):
+    del block_sid_ref  # consumed by the index maps
+    regs = regs_ref[...]                       # (Bb, k)
+    thr = thr_ref[0]                           # (k, T)
+    lo = lo_ref[0]                             # (L, k)
+    hi = hi_ref[0]                             # (L, k)
+    act = act_ref[0]                           # (L,)
+    lvalid = valid_ref[0]                      # (L,)
+
+    marks = (regs[:, :, None] > thr[None]).sum(axis=2).astype(jnp.int32)
+    m = marks[:, None, :]                      # (Bb, 1, k)
+    hit = (m >= lo[None]) & (m <= hi[None])    # (Bb, L, k)
+    hit = hit.all(axis=2) & (lvalid[None] > 0)  # (Bb, L)
+    Bb, L = hit.shape
+    lidx = jax.lax.broadcasted_iota(jnp.int32, (Bb, L), 1)
+    first = jnp.min(jnp.where(hit, lidx, L), axis=1)
+    sel = (lidx == first[:, None]) & hit
+    action = (act[None] * sel).sum(axis=1)
+    found = hit.any(axis=1)
+    out_ref[...] = jnp.where(found, action, -1)[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def dt_traverse_pallas(
+    block_sid: jnp.ndarray,    # (n_blocks,) int32: SID of each flow block
+    regs: jnp.ndarray,         # (n_blocks*Bb, k) f32, grouped by SID
+    thresholds: jnp.ndarray,   # (S, k, T) f32 (+inf padded)
+    leaf_lo: jnp.ndarray,      # (S, L, k) int32
+    leaf_hi: jnp.ndarray,      # (S, L, k) int32
+    leaf_action: jnp.ndarray,  # (S, L) int32
+    leaf_valid: jnp.ndarray,   # (S, L) int32 (0/1)
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+) -> jnp.ndarray:
+    """Returns action (n_blocks*Bb, 1) int32; -1 where no leaf matched."""
+    nb = block_sid.shape[0]
+    S, k, T = thresholds.shape
+    L = leaf_lo.shape[1]
+    bb = block_b
+    assert regs.shape[0] == nb * bb, (regs.shape, nb, bb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((bb, k), lambda i, bs: (i, 0)),
+            pl.BlockSpec((1, k, T), lambda i, bs: (bs[i], 0, 0)),
+            pl.BlockSpec((1, L, k), lambda i, bs: (bs[i], 0, 0)),
+            pl.BlockSpec((1, L, k), lambda i, bs: (bs[i], 0, 0)),
+            pl.BlockSpec((1, L), lambda i, bs: (bs[i], 0)),
+            pl.BlockSpec((1, L), lambda i, bs: (bs[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i, bs: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb * bb, 1), jnp.int32),
+        interpret=interpret,
+    )(block_sid, regs, thresholds, leaf_lo, leaf_hi, leaf_action, leaf_valid)

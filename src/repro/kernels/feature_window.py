@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: windowed stateful feature accumulation.
+
+The data-plane hot loop of SpliDT's Feature Collection & Engineering
+phase (paper §3.1.1), adapted to TPU (DESIGN.md §2): instead of
+per-packet register scatter, the pipeline delivers flow-major windows
+``(B, W, fields)`` and the kernel performs the per-SID operator-selected
+register update for a block of flows entirely in VMEM.
+
+Grid: one step per flow block.  Per-flow op/field/pred rows are gathered
+from the SID-indexed operator-selection tables *outside* the kernel
+(tiny XLA gathers); the kernel does the O(B * W * k) reduction work.
+
+Layout: flow blocks of ``BLOCK_B`` rows; the packet window (W, up to a
+few hundred) and the k slots live fully in VMEM
+(BLOCK_B * W * 6 * 4B ~= 0.2 MB at BLOCK_B=128, W=64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import features as F
+
+BLOCK_B = 128
+
+
+def _kernel(pkts_ref, op_ref, field_ref, pred_ref, init_ref, out_ref):
+    pkts = pkts_ref[...]                                   # (Bb, W, F)
+    op = op_ref[...]                                       # (Bb, k)
+    field = field_ref[...]
+    pred = pred_ref[...]
+    init = init_ref[...]
+    Bb, W, _ = pkts.shape
+    k = op.shape[1]
+
+    valid = pkts[..., F.PKT_VALID] > 0                     # (Bb, W)
+    direc = pkts[..., F.PKT_DIR]
+    flags = pkts[..., F.PKT_FLAGS].astype(jnp.int32)
+
+    p = pred[:, None, :]                                   # (Bb, 1, k)
+    v = valid[:, :, None]
+    mask = v & (p == F.PRED_TRUE)
+    mask |= v & (p == F.PRED_FWD) & (direc[:, :, None] == 0)
+    mask |= v & (p == F.PRED_BWD) & (direc[:, :, None] == 1)
+    for code, bit in ((F.PRED_SYN, F.FLAG_SYN), (F.PRED_ACK, F.FLAG_ACK),
+                      (F.PRED_FIN, F.FLAG_FIN), (F.PRED_RST, F.FLAG_RST),
+                      (F.PRED_PSH, F.FLAG_PSH), (F.PRED_URG, F.FLAG_URG)):
+        mask |= v & (p == code) & ((flags[:, :, None] & bit) > 0)
+
+    fsel = field[:, None, :]
+    val = jnp.zeros((Bb, W, k), jnp.float32)
+    for c in range(F.PKT_NFIELDS):
+        val = jnp.where(fsel == c, pkts[..., c][:, :, None], val)
+
+    mf = mask.astype(jnp.float32)
+    count = mf.sum(axis=1)
+    total = (val * mf).sum(axis=1)
+    sumsq = (val * val * mf).sum(axis=1)
+    neg_big = jnp.float32(-3.4e38)
+    pos_big = jnp.float32(3.4e38)
+    mx = jnp.max(jnp.where(mask, val, neg_big), axis=1)
+    mx = jnp.where(mx <= neg_big, 0.0, mx)
+    mn = jnp.min(jnp.where(mask, val, pos_big), axis=1)
+    mn = jnp.where(mn >= pos_big, init, mn)
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (Bb, W, k), 1)
+    first_i = jnp.min(jnp.where(mask, pos, W), axis=1)     # (Bb, k)
+    last_i = jnp.max(jnp.where(mask, pos, -1), axis=1)
+    # branchless select-at-index: one-hot dot over the window axis
+    first = (val * ((pos == first_i[:, None, :]) & mask)).sum(axis=1)
+    last = (val * ((pos == last_i[:, None, :]) & mask)).sum(axis=1)
+
+    out = jnp.zeros((Bb, k), jnp.float32)
+    out = jnp.where(op == F.OP_COUNT, count, out)
+    out = jnp.where(op == F.OP_SUM, total, out)
+    out = jnp.where(op == F.OP_MAX, mx, out)
+    out = jnp.where(op == F.OP_MIN, mn, out)
+    out = jnp.where(op == F.OP_LAST, last, out)
+    out = jnp.where(op == F.OP_FIRST, first, out)
+    out = jnp.where(op == F.OP_SUMSQ, sumsq, out)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def feature_window_pallas(
+    pkts: jnp.ndarray,        # (B, W, PKT_NFIELDS) f32
+    slot_op: jnp.ndarray,     # (B, k) int32 (pre-gathered by SID)
+    slot_field: jnp.ndarray,  # (B, k)
+    slot_pred: jnp.ndarray,   # (B, k)
+    slot_init: jnp.ndarray,   # (B, k) f32
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+) -> jnp.ndarray:
+    B, W, nf = pkts.shape
+    k = slot_op.shape[1]
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        pkts = jnp.pad(pkts, ((0, pad), (0, 0), (0, 0)))
+        slot_op = jnp.pad(slot_op, ((0, pad), (0, 0)))
+        slot_field = jnp.pad(slot_field, ((0, pad), (0, 0)))
+        slot_pred = jnp.pad(slot_pred, ((0, pad), (0, 0)))
+        slot_init = jnp.pad(slot_init, ((0, pad), (0, 0)))
+    Bp = B + pad
+    grid = (Bp // bb,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, W, nf), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+        interpret=interpret,
+    )(pkts, slot_op, slot_field, slot_pred, slot_init)
+    return out[:B]

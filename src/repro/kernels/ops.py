@@ -1,0 +1,153 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op dispatches between three implementations:
+  * ``ref``     — pure-jnp oracle (CPU default; always correct)
+  * ``pallas``  — the Pallas kernel, ``interpret=True`` off-TPU
+  * ``auto``    — pallas on TPU, ref elsewhere
+
+The wrappers also own the host-side data marshalling the switch pipeline
+would do in hardware: gathering per-SID operator rows (feature_window)
+and grouping flows by SID into padded blocks (dt_traverse — the MAT
+"match on SID" stage).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.range_tables import RangeExecTables
+from repro.core.tables import PackedTables
+from repro.kernels import ref as _ref
+from repro.kernels.chunk_scan import chunk_scan_pallas
+from repro.kernels.dt_traverse import BLOCK_B, dt_traverse_pallas
+from repro.kernels.feature_window import feature_window_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# feature_window
+# ---------------------------------------------------------------------------
+def feature_window(
+    pkts: jnp.ndarray,          # (B, W, PKT_NFIELDS)
+    sid: jnp.ndarray,           # (B,) int32
+    tables: PackedTables,
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Compute the k feature registers for each flow's active subtree."""
+    impl = _resolve(impl)
+    op = jnp.asarray(tables.slot_op)[sid]        # (B, k) — MAT keyed on SID
+    field = jnp.asarray(tables.slot_field)[sid]
+    pred = jnp.asarray(tables.slot_pred)[sid]
+    init = jnp.asarray(tables.slot_init)[sid]
+    if impl == "ref":
+        return _ref.feature_window_ref(pkts, op, field, pred, init)
+    return feature_window_pallas(pkts, op, field, pred, init,
+                                 interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# dt_traverse
+# ---------------------------------------------------------------------------
+def dt_traverse(
+    regs: jnp.ndarray,          # (B, k)
+    sid: jnp.ndarray,           # (B,) int32
+    ret: RangeExecTables,
+    *,
+    impl: str = "auto",
+    block_b: int = BLOCK_B,
+) -> jnp.ndarray:
+    """Range-mark match each flow against its active subtree -> action (B,)."""
+    impl = _resolve(impl)
+    thr = jnp.asarray(ret.thresholds)
+    lo = jnp.asarray(ret.leaf_lo)
+    hi = jnp.asarray(ret.leaf_hi)
+    act = jnp.asarray(ret.leaf_action)
+    val = jnp.asarray(ret.leaf_valid.astype(np.int32))
+    if impl == "ref":
+        return _ref.dt_traverse_ref(regs, thr[sid], lo[sid], hi[sid],
+                                    act[sid], val[sid] > 0)
+
+    # group flows by SID into padded blocks (MoE-dispatch style)
+    sid_np = np.asarray(sid)
+    B = sid_np.shape[0]
+    order = np.argsort(sid_np, kind="stable")
+    sids, counts = np.unique(sid_np, return_counts=True)
+    blocks_per_sid = [-(-int(c) // block_b) for c in counts]
+    nb = int(sum(blocks_per_sid))
+    padded = nb * block_b
+    # scatter each SID segment to a block-aligned offset
+    perm_dst = np.zeros(B, dtype=np.int64)
+    block_sid = np.zeros(nb, dtype=np.int32)
+    off = blk = 0
+    src = 0
+    for s, c, nbl in zip(sids, counts, blocks_per_sid):
+        perm_dst[src:src + c] = np.arange(c) + off
+        block_sid[blk:blk + nbl] = s
+        off += nbl * block_b
+        blk += nbl
+        src += c
+    regs_g = jnp.zeros((padded, regs.shape[1]), regs.dtype)
+    regs_g = regs_g.at[jnp.asarray(perm_dst)].set(regs[jnp.asarray(order)])
+    out = dt_traverse_pallas(
+        jnp.asarray(block_sid), regs_g, thr, lo, hi, act, val,
+        interpret=not _on_tpu(), block_b=block_b)[:, 0]
+    # un-permute
+    result = jnp.zeros((B,), jnp.int32)
+    return result.at[jnp.asarray(order)].set(out[jnp.asarray(perm_dst)])
+
+
+# ---------------------------------------------------------------------------
+# chunk_scan
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("impl", "chunk"))
+def _chunk_scan_jit(q, k, v, decay, bonus, state, impl, chunk):
+    use_bonus = bonus is not None
+    if impl == "ref":
+        return _ref.chunk_scan_chunked_ref(q, k, v, decay, bonus, state,
+                                           chunk=min(chunk, q.shape[1]))
+    b = bonus if use_bonus else jnp.zeros((q.shape[0], q.shape[2]), jnp.float32)
+    return chunk_scan_pallas(q, k, v, decay, b, state, chunk=chunk,
+                             use_bonus=use_bonus, interpret=not _on_tpu())
+
+
+def chunk_scan(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    decay: jnp.ndarray,
+    bonus: jnp.ndarray | None = None,
+    state: jnp.ndarray | None = None,
+    *,
+    chunk: int = 128,
+    impl: str = "auto",
+):
+    """Gated linear recurrence over (B, T, d) inputs; see chunk_scan.py."""
+    impl = _resolve(impl)
+    if state is None:
+        state = jnp.zeros((q.shape[0], q.shape[2], v.shape[2]), jnp.float32)
+    if q.shape[1] % min(chunk, q.shape[1]) != 0:
+        # pad T to a chunk multiple with zero decay-neutral steps
+        T = q.shape[1]
+        C = min(chunk, T) if T >= chunk else T
+        pad = (-T) % chunk if T > chunk else 0
+        if pad:
+            zq = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            o, s = _chunk_scan_jit(zq(q), zq(k), zq(v),
+                                   jnp.pad(decay, ((0, 0), (0, pad), (0, 0)),
+                                           constant_values=1.0),
+                                   bonus, state, impl, chunk)
+            return o[:, :T], s
+    return _chunk_scan_jit(q, k, v, decay, bonus, state, impl, chunk)

@@ -1,0 +1,210 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references: simple, obviously-right
+implementations with no tiling, used by tests (`assert_allclose` against
+the kernels in interpret mode) and as the CPU fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import features as F
+
+# ---------------------------------------------------------------------------
+# feature_window: windowed stateful feature accumulation
+# ---------------------------------------------------------------------------
+
+
+def _pred_mask(pkts: jnp.ndarray, pred: jnp.ndarray) -> jnp.ndarray:
+    """pkts (B, W, F), pred (B, k) codes -> (B, W, k) bool."""
+    valid = pkts[..., F.PKT_VALID] > 0                      # (B, W)
+    direc = pkts[..., F.PKT_DIR]
+    flags = pkts[..., F.PKT_FLAGS].astype(jnp.int32)
+    p = pred[:, None, :]                                    # (B, 1, k)
+    v = valid[:, :, None]
+    out = v & (p == F.PRED_TRUE)
+    out |= v & (p == F.PRED_FWD) & (direc[:, :, None] == 0)
+    out |= v & (p == F.PRED_BWD) & (direc[:, :, None] == 1)
+    for code, bit in ((F.PRED_SYN, F.FLAG_SYN), (F.PRED_ACK, F.FLAG_ACK),
+                      (F.PRED_FIN, F.FLAG_FIN), (F.PRED_RST, F.FLAG_RST),
+                      (F.PRED_PSH, F.FLAG_PSH), (F.PRED_URG, F.FLAG_URG)):
+        out |= v & (p == code) & ((flags[:, :, None] & bit) > 0)
+    return out
+
+
+def _field_vals(pkts: jnp.ndarray, field: jnp.ndarray) -> jnp.ndarray:
+    """pkts (B, W, F), field (B, k) codes -> (B, W, k) selected field."""
+    f = field[:, None, :]
+    out = jnp.zeros(pkts.shape[:2] + (field.shape[1],), pkts.dtype)
+    for c in range(F.PKT_NFIELDS):
+        out = jnp.where(f == c, pkts[..., c][:, :, None], out)
+    return out
+
+
+def feature_window_ref(
+    pkts: jnp.ndarray,       # (B, W, PKT_NFIELDS)
+    slot_op: jnp.ndarray,    # (B, k) per-flow op codes (pre-gathered by SID)
+    slot_field: jnp.ndarray, # (B, k)
+    slot_pred: jnp.ndarray,  # (B, k)
+    slot_init: jnp.ndarray,  # (B, k)
+) -> jnp.ndarray:
+    """Branchless windowed register update; returns regs (B, k) f32."""
+    mask = _pred_mask(pkts, slot_pred)                       # (B, W, k)
+    val = _field_vals(pkts, slot_field)                      # (B, W, k)
+    mf = mask.astype(jnp.float32)
+
+    count = mf.sum(axis=1)
+    total = (val * mf).sum(axis=1)
+    sumsq = (val * val * mf).sum(axis=1)
+    mx = jnp.where(mask, val, -jnp.inf).max(axis=1)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = jnp.where(mask, val, jnp.inf).min(axis=1)
+    mn = jnp.where(jnp.isfinite(mn), mn, slot_init)
+    W = pkts.shape[1]
+    pos = jnp.arange(W)[None, :, None]
+    first_i = jnp.where(mask, pos, W).min(axis=1)
+    last_i = jnp.where(mask, pos, -1).max(axis=1)
+    any_ = mask.any(axis=1)
+    first = jnp.where(any_, jnp.take_along_axis(
+        val, jnp.minimum(first_i, W - 1)[:, None, :], axis=1)[:, 0, :], 0.0)
+    last = jnp.where(any_, jnp.take_along_axis(
+        val, jnp.maximum(last_i, 0)[:, None, :], axis=1)[:, 0, :], 0.0)
+
+    op = slot_op
+    out = jnp.zeros_like(total)
+    out = jnp.where(op == F.OP_COUNT, count, out)
+    out = jnp.where(op == F.OP_SUM, total, out)
+    out = jnp.where(op == F.OP_MAX, mx, out)
+    out = jnp.where(op == F.OP_MIN, mn, out)
+    out = jnp.where(op == F.OP_LAST, last, out)
+    out = jnp.where(op == F.OP_FIRST, first, out)
+    out = jnp.where(op == F.OP_SUMSQ, sumsq, out)
+    return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dt_traverse: range-mark matching (grouped by SID outside the kernel)
+# ---------------------------------------------------------------------------
+
+
+def dt_traverse_ref(
+    regs: jnp.ndarray,        # (B, k) feature registers
+    thresholds: jnp.ndarray,  # (B, k, T) per-flow subtree thresholds (+inf pad)
+    leaf_lo: jnp.ndarray,     # (B, L, k)
+    leaf_hi: jnp.ndarray,     # (B, L, k)
+    leaf_action: jnp.ndarray, # (B, L) int32, -1 padding
+    leaf_valid: jnp.ndarray,  # (B, L) bool
+) -> jnp.ndarray:
+    """Range-marking execution; returns action (B,) int32."""
+    marks = (regs[:, :, None] > thresholds).sum(axis=2).astype(jnp.int32)  # (B,k)
+    m = marks[:, None, :]                                    # (B, 1, k)
+    hit = (m >= leaf_lo) & (m <= leaf_hi)                    # (B, L, k)
+    hit = hit.all(axis=2) & leaf_valid                       # (B, L)
+    L = hit.shape[1]
+    first = jnp.where(hit, jnp.arange(L)[None, :], L).min(axis=1)
+    safe = jnp.minimum(first, L - 1)
+    action = jnp.take_along_axis(leaf_action, safe[:, None], axis=1)[:, 0]
+    return jnp.where(first < L, action, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# chunk_scan: gated linear recurrence (RWKV6 / Mamba2-SSD family)
+# ---------------------------------------------------------------------------
+
+
+def chunk_scan_ref(
+    q: jnp.ndarray,      # (B, T, dk)
+    k: jnp.ndarray,      # (B, T, dk)
+    v: jnp.ndarray,      # (B, T, dv)
+    decay: jnp.ndarray,  # (B, T, dk) in (0, 1]; per-channel data-dependent
+    bonus: jnp.ndarray | None = None,   # (B, dk) RWKV6 "u" or None
+    state: jnp.ndarray | None = None,   # (B, dk, dv) initial state
+):
+    """Naive per-token recurrence (the oracle).
+
+        S_t = diag(decay_t) S_{t-1} + k_t^T v_t
+        o_t = q_t (S_{t-1} + diag(bonus) k_t^T v_t)   [RWKV6 bonus form]
+    With bonus=None: o_t = q_t S_t (GLA/SSD form).
+
+    Returns (o (B, T, dv), final_state (B, dk, dv)).
+    """
+    B, T, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, dk, dv), jnp.float32)
+
+    def step(S, xs):
+        qt, kt, vt, wt = xs
+        kv = kt[:, :, None] * vt[:, None, :]                 # (B, dk, dv)
+        if bonus is not None:
+            o = jnp.einsum("bk,bkv->bv", qt, S + bonus[:, :, None] * kv)
+            S = wt[:, :, None] * S + kv
+        else:
+            S = wt[:, :, None] * S + kv
+            o = jnp.einsum("bk,bkv->bv", qt, S)
+        return S, o
+
+    xs = (q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+          v.transpose(1, 0, 2), decay.transpose(1, 0, 2))
+    final, o = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return o.transpose(1, 0, 2).astype(v.dtype), final
+
+
+def chunk_scan_chunked_ref(q, k, v, decay, bonus=None, state=None, chunk: int = 64):
+    """Chunked (parallel-within-chunk) formulation in plain jnp.
+
+    Mathematically identical to :func:`chunk_scan_ref`; this mirrors the
+    Pallas kernel's blocking so tests can separate "chunking math wrong"
+    from "kernel plumbing wrong".  SpliDT connection: the chunk is the
+    window, the carried state is the reused register set (DESIGN.md §2).
+    """
+    B, T, dk = q.shape
+    dv = v.shape[-1]
+    assert T % chunk == 0, "pad T to a chunk multiple"
+    nC = T // chunk
+    if state is None:
+        state = jnp.zeros((B, dk, dv), jnp.float32)
+    qc = q.reshape(B, nC, chunk, dk).astype(jnp.float32)
+    kc = k.reshape(B, nC, chunk, dk).astype(jnp.float32)
+    vc = v.reshape(B, nC, chunk, dv).astype(jnp.float32)
+    wc = decay.reshape(B, nC, chunk, dk).astype(jnp.float32)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                # inclusive cumulative log-decay
+    total = cum[:, :, -1, :]                      # (B, nC, dk)
+
+    def chunk_step(S, xs):
+        qi, ki, vi, logwi, cumi, totali = xs      # (B, chunk, ...)
+        # GLA form: kv_s reaches o_t with decay prod_{r=s+1..t} w_r (incl. w_t)
+        # bonus form: o_t reads S_{t-1}, so the product excludes w_t
+        cum_q = cumi if bonus is None else cumi - logwi
+        # mid-chunk-centred reference halves the exponent dynamic range
+        # (pairwise products only need differences of cum)
+        mref = cumi[:, chunk // 2, :][:, None, :]
+        q_in = qi * jnp.exp(jnp.clip(cum_q - mref, -45.0, 45.0))
+        k_in = ki * jnp.exp(jnp.clip(mref - cumi, -45.0, 45.0))
+        # keys folded into state need decay from s+1 .. end-of-chunk
+        d_out = jnp.exp(totali[:, None, :] - cumi)
+        att = jnp.einsum("btk,bsk->bts", q_in, k_in)
+        if bonus is None:
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        else:
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # strictly causal
+        att = jnp.where(mask[None], att, 0.0)
+        o_intra = jnp.einsum("bts,bsv->btv", att, vi)
+        if bonus is not None:
+            diag = jnp.einsum("btk,bk,btk->bt", qi, bonus, ki)
+            o_intra = o_intra + diag[:, :, None] * vi
+        # inter-chunk reads the carried state with the TRUE decay from
+        # chunk start (uncentred; underflow to 0 is the correct limit)
+        o_inter = jnp.einsum("btk,bkv->btv", qi * jnp.exp(cum_q), S)
+        S = jnp.exp(totali)[:, :, None] * S + jnp.einsum(
+            "btk,btv->bkv", ki * d_out, vi)
+        return S, o_intra + o_inter
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (qc, kc, vc, logw, cum)) + (
+        total.transpose(1, 0, 2),)
+    final, o = jax.lax.scan(chunk_step, state.astype(jnp.float32), xs)
+    o = o.transpose(1, 0, 2, 3).reshape(B, T, dv)
+    return o.astype(v.dtype), final

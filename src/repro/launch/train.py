@@ -1,0 +1,121 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Wires together: config -> model -> data pipeline (prefetching Markov
+stream) -> AdamW train step (donated buffers) -> async checkpointing ->
+step watchdog (straggler flags) -> recovery on restart (resumes from the
+last committed checkpoint and the matching stream position).
+
+On a real pod the same script runs under the production mesh; on CPU use
+``--reduced`` (tiny same-family config) — the end-to-end example trains
+a ~100M model a few hundred steps this way.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_arch
+from repro.data.tokens import TokenPipeline
+from repro.distributed import pspec as pspec_lib
+from repro.launch.mesh import make_host_mesh, mesh_shape_dict
+from repro.models import model_zoo
+from repro.train import checkpoint as ckpt_lib
+from repro.train.elastic import StepWatchdog
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.train_step import TrainLoopCfg, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M model on CPU)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.d_model:
+        cfg = dataclasses.replace(
+            cfg, d_model=args.d_model, n_heads=max(args.d_model // 64, 1),
+            n_kv_heads=max(min(cfg.n_kv_heads, args.d_model // 64), 1),
+            d_ff=args.d_model * 3, d_head=64)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+
+    zoo = model_zoo.get_model(cfg)
+    defs = zoo.param_defs(cfg)
+    opt = AdamW(lr=warmup_cosine(args.lr, 20, args.steps))
+    loop = TrainLoopCfg(microbatches=args.microbatches,
+                        compress_grads=args.compress_grads)
+    raw_step = make_train_step(cfg, opt, loop)
+    step_fn = jax.jit(raw_step, donate_argnums=(0,))
+
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    start_step = 0
+    state = None
+    if args.ckpt_dir:
+        last = ckpt_lib.latest_committed(args.ckpt_dir)
+        if last:
+            state, _ = ckpt_lib.restore(last)
+            state = jax.tree.map(jnp.asarray, state)
+            start_step = int(jax.device_get(state.step))
+            print(f"resumed from {last} at step {start_step}")
+    if state is None:
+        params = pspec_lib.init_params(defs, jax.random.key(args.seed))
+        state = opt.init(params)
+
+    n_params = pspec_lib.param_count(defs)
+    print(f"arch={cfg.arch_id} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    writer = ckpt_lib.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    wd = StepWatchdog(on_straggler=lambda s, dt, ema: print(
+        f"  [watchdog] step {s} took {dt:.2f}s (ema {ema:.2f}s)"))
+    comp_err = None
+    losses = []
+    it = pipe.iterate(start_step)
+    for i in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        t0 = time.perf_counter()
+        state, metrics, comp_err = step_fn(state, batch, comp_err)
+        loss = float(jax.device_get(metrics["loss"]))
+        losses.append(loss)
+        wd.observe(i + 1, time.perf_counter() - t0)
+        if (i + 1) % args.log_every == 0 or i == start_step:
+            print(f"step {i+1:5d} loss {loss:.4f} "
+                  f"gnorm {float(jax.device_get(metrics['grad_norm'])):.3f}")
+        if writer and (i + 1) % args.ckpt_every == 0:
+            writer.save(state)
+    if writer:
+        writer.save(state)
+        writer.wait()
+    print(f"done. first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean loss {np.mean(losses[-10:]):.4f}; "
+          f"uniform floor {np.log(cfg.vocab):.3f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,438 @@
+"""Shared layer library: norms, rotary, GQA attention (train/prefill/
+decode, causal / prefix-LM / sliding-window), gated MLPs.
+
+All functions are pure; parameters are nested dicts declared via
+``distributed.pspec.ParamDef``.  Compute dtype is bf16 with f32 softmax
+and norm statistics (MaxText convention); params stay f32 (the optimizer
+and FSDP sharding own their memory layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.pspec import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+Params = Any
+
+# --- scan unrolling (dry-run mode) -----------------------------------------
+# XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+# count, which would corrupt the roofline table.  The dry-run sets
+# set_unroll(True) so layer stacks lower as straight-line code with exact
+# FLOP/byte accounting; training/serving keep the compact scan form.
+_UNROLL_SCANS = False
+
+
+def set_unroll(v: bool) -> None:
+    global _UNROLL_SCANS
+    _UNROLL_SCANS = bool(v)
+
+
+def scan_layers(body, carry, xs, length: int | None = None):
+    """jax.lax.scan, or an unrolled Python loop under dry-run mode."""
+    if not _UNROLL_SCANS:
+        return jax.lax.scan(body, carry, xs)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked
+
+
+# activation layout mode: "tp" (default; heads/mlp constraints on the
+# "model" axis) or "fsdp2d" (§Perf: no TP — the "model" axis becomes a
+# second data axis; activation constraints drop "model" and the batch
+# rides all axes).
+_LAYOUT = "tp"
+
+
+def set_layout(mode: str) -> None:
+    global _LAYOUT
+    assert mode in ("tp", "fsdp2d")
+    global BATCH_AXES
+    _LAYOUT = mode
+    BATCH_AXES = (("pod", "data", "model") if mode == "fsdp2d"
+                  else ("pod", "data"))
+
+
+def shard(x: jnp.ndarray, *axes) -> jnp.ndarray:
+    """Sharding constraint filtered to the axes of the ambient mesh.
+
+    No-op outside a mesh context (CPU unit tests); on the production
+    mesh, unknown axis names (e.g. "pod" on the single-pod mesh) are
+    dropped from the spec so the same model code serves every mesh.
+    Under the fsdp2d layout, lone "model" activation constraints are
+    dropped (the model axis carries batch, not heads).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    if _LAYOUT == "fsdp2d":
+        axes = tuple(None if a == "model" else a for a in axes)
+    sizes = dict(mesh.shape)
+
+    def keep(a, dim):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(n for n in a if n in sizes)
+            total = 1
+            for n in kept:
+                total *= sizes[n]
+            return kept if kept and dim % total == 0 else None
+        if a in sizes and dim % sizes[a] == 0:
+            return a
+        return None
+
+    spec = P(*[keep(a, d) for a, d in zip(axes, x.shape)])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+BATCH_AXES = ("pod", "data")  # logical batch -> these mesh axes
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_def(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed",), init="ones")
+
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm(x: jnp.ndarray, n_groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over the last dim (RWKV6 head-wise ln_x), no affine."""
+    *lead, d = x.shape
+    xf = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.reshape(*lead, d).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, T, H, Dh) with even Dh; positions: (B, T) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq        # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+# §Perf iteration 1 (EXPERIMENTS.md): blockwise online-softmax attention.
+# The naive path materialises (B, H, Tq, Tk) f32 probabilities -- the
+# dominant HBM-bytes term of every train/prefill cell.  The blockwise
+# path streams KV in blocks with a running (max, denom, acc) carry, so
+# per-step footprint is (B, H, Tq, BLOCK) and total attention bytes drop
+# ~Tk/BLOCK-fold.  Enabled when Tk >= _BLOCKWISE_MIN (off for smoke-test
+# shapes, on for the 4k-512k assigned shapes).
+_BLOCKWISE_MIN = 2048
+_KV_BLOCK = 512
+
+
+def set_blockwise_min(n: int) -> None:
+    """Test/benchmark hook: threshold for the blockwise attention path."""
+    global _BLOCKWISE_MIN
+    _BLOCKWISE_MIN = n
+
+
+# §Perf switch: slice sliding-window decode to the last `window` cache
+# positions (base dry-run layout disables it for a faithful baseline)
+_WINDOW_SLICE = True
+
+
+def set_window_slice(v: bool) -> None:
+    global _WINDOW_SLICE
+    _WINDOW_SLICE = bool(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnShape:
+    n_heads: int
+    n_kv: int
+    d_head: int
+
+
+def attention_defs(d_model: int, a: AttnShape) -> dict:
+    return {
+        "wq": ParamDef((d_model, a.n_heads, a.d_head), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d_model, a.n_kv, a.d_head), ("embed", "kv", "head_dim")),
+        "wv": ParamDef((d_model, a.n_kv, a.d_head), ("embed", "kv", "head_dim")),
+        "wo": ParamDef((a.n_heads, a.d_head, d_model), ("heads", "head_dim", "embed")),
+    }
+
+
+def attend(
+    q: jnp.ndarray,                # (B, Tq, Hq, Dh)
+    k: jnp.ndarray,                # (B, Tk, Hkv, Dh)
+    v: jnp.ndarray,                # (B, Tk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    q_offset: jnp.ndarray | int = 0,
+    kv_len: jnp.ndarray | None = None,   # valid cache length (decode)
+    prefix_len: jnp.ndarray | int = 0,   # prefix-LM bidirectional span
+    window: int = 0,                     # sliding window (0 = full)
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Grouped-query attention with composable masking.  f32 softmax.
+
+    KV heads are broadcast to the full query-head count before the score
+    einsum so the head dim stays shardable on the "model" axis (a
+    4-KV-head split reshape would force replication under GSPMD).
+    """
+    B, Tq, Hq, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    if Tk >= _BLOCKWISE_MIN and Tq > 1:
+        return _attend_blockwise(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            prefix_len=prefix_len, window=window, scale=scale)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = shard(k, BATCH_AXES, None, "model", None)
+        v = shard(v, BATCH_AXES, None, "model", None)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+
+    qpos = q_offset + jnp.arange(Tq)[:, None]          # (Tq, 1)
+    kpos = jnp.arange(Tk)[None, :]                     # (1, Tk)
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        cm = kpos <= qpos
+        if not isinstance(prefix_len, int) or prefix_len != 0:
+            cm |= kpos < prefix_len
+        mask &= cm
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out
+
+
+def _attend_blockwise(q, k, v, *, causal, q_offset, kv_len, prefix_len,
+                      window, scale, block=None):
+    """Online-softmax attention over KV blocks (FlashAttention schedule
+    in pure JAX; the TPU kernel equivalent fuses this into VMEM tiles).
+
+    Mathematically identical to :func:`attend`'s naive path; property
+    tests assert allclose.  Each block step is rematerialised so the
+    backward pass never holds more than one block's logits.
+    """
+    B, Tq, Hq, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        k = shard(k, BATCH_AXES, None, "model", None)
+        v = shard(v, BATCH_AXES, None, "model", None)
+    blk = block or _KV_BLOCK
+    blk = min(blk, Tk)
+    pad = (-Tk) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (Tk + pad) // blk
+    kb = k.reshape(B, nb, blk, Hq, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, blk, Hq, Dh).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Tq)[:, None]              # (Tq, 1)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, xs):
+        acc, m, denom = carry
+        kv_i, (ki, vi) = xs
+        lg = jnp.einsum("bthd,bshd->bhts", qf, ki.astype(jnp.float32)) * scale
+        kpos = kv_i * blk + jnp.arange(blk)[None, :]
+        mask = kpos < Tk
+        if causal:
+            cm = kpos <= qpos
+            if not isinstance(prefix_len, int) or prefix_len != 0:
+                cm |= kpos < prefix_len
+            mask &= cm
+        if window:
+            mask &= kpos > qpos - window
+        if kv_len is not None:
+            mask &= kpos < kv_len
+        lg = jnp.where(mask[None, None], lg, -1e30)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(lg - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhts,bshd->bhtd", p, vi.astype(jnp.float32))
+        return (acc, m_new, denom), None
+
+    init = (jnp.zeros((B, Hq, Tq, Dh), jnp.float32),
+            jnp.full((B, Hq, Tq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Hq, Tq), jnp.float32))
+    step = jax.checkpoint(step)
+    # scan_layers so the dry-run's unroll mode sees exact per-block costs
+    (acc, m, denom), _ = scan_layers(step, init,
+                                     (jnp.arange(nb), (kb, vb)), length=nb)
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(v.dtype)
+
+
+def attention_block(
+    p: Params,
+    x: jnp.ndarray,                 # (B, T, D)
+    *,
+    shape: AttnShape,
+    rope_theta: float = 10000.0,
+    positions: jnp.ndarray | None = None,
+    causal: bool = True,
+    prefix_len=0,
+    window: int = 0,
+    cache: dict | None = None,      # {"k","v" (B, S, Hkv, Dh), "len"}
+) -> tuple[jnp.ndarray, dict | None]:
+    """Self-attention with optional KV cache (prefill fills, decode appends)."""
+    B, T, _ = x.shape
+    xc = x.astype(COMPUTE_DTYPE)
+    q = jnp.einsum("btd,dhk->bthk", xc, p["wq"].astype(COMPUTE_DTYPE))
+    k = jnp.einsum("btd,dhk->bthk", xc, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("btd,dhk->bthk", xc, p["wv"].astype(COMPUTE_DTYPE))
+    q = shard(q, BATCH_AXES, None, "model", None)
+    k = shard(k, BATCH_AXES, None, "model", None)
+    v = shard(v, BATCH_AXES, None, "model", None)
+
+    if cache is None:
+        pos = positions if positions is not None else (
+            jnp.broadcast_to(jnp.arange(T)[None], (B, T)))
+        if rope_theta:
+            q, k = rope(q, pos, rope_theta), rope(k, pos, rope_theta)
+        out = attend(q, k, v, causal=causal, prefix_len=prefix_len,
+                     window=window)
+        new_cache = None
+    else:
+        cur = cache["len"]
+        pos = cur + jnp.arange(T)[None] + jnp.zeros((B, 1), jnp.int32)
+        if rope_theta:
+            q, k = rope(q, pos, rope_theta), rope(k, pos, rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cur, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cur, axis=1)
+        S = ck.shape[1]
+        if window and _WINDOW_SLICE and S > 2 * window and T <= window:
+            # §Perf (long_500k): sliding-window decode only ever attends
+            # to the last `window` positions — slice them out instead of
+            # masking the whole 500k cache (bytes drop ~S/window-fold)
+            start = jnp.clip(cur + T - window, 0, S - window)
+            ck_w = jax.lax.dynamic_slice_in_dim(ck, start, window, axis=1)
+            cv_w = jax.lax.dynamic_slice_in_dim(cv, start, window, axis=1)
+            out = attend(q, ck_w, cv_w, causal=True, q_offset=cur - start,
+                         kv_len=cur + T - start, prefix_len=prefix_len,
+                         window=window)
+        else:
+            out = attend(q, ck, cv, causal=True, q_offset=cur,
+                         kv_len=cur + T, prefix_len=prefix_len,
+                         window=window)
+        new_cache = {"k": ck, "v": cv, "len": cur + T}
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(COMPUTE_DTYPE))
+    return out.astype(x.dtype), new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, shape: AttnShape,
+                  dtype=COMPUTE_DTYPE) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, shape.n_kv, shape.d_head), dtype),
+        "v": jnp.zeros((batch, max_len, shape.n_kv, shape.d_head), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_defs(d_model: int, d_ff: int, act: str) -> dict:
+    if act in ("silu", "relu_sq"):   # gated
+        return {
+            "wg": ParamDef((d_model, d_ff), ("embed", "mlp")),
+            "wu": ParamDef((d_model, d_ff), ("embed", "mlp")),
+            "wd": ParamDef((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "wd": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    xc = x.astype(COMPUTE_DTYPE)
+    if "wg" in p:
+        g = xc @ p["wg"].astype(COMPUTE_DTYPE)
+        u = xc @ p["wu"].astype(COMPUTE_DTYPE)
+        g = shard(g, BATCH_AXES, None, "model")
+        if act == "relu_sq":
+            h = jnp.square(jax.nn.relu(g)) * u
+        else:
+            h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(xc @ p["wi"].astype(COMPUTE_DTYPE))
+        h = shard(h, BATCH_AXES, None, "model")
+    out = h @ p["wd"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+def embed_defs(vocab: int, d_model: int) -> ParamDef:
+    return ParamDef((vocab, d_model), ("vocab", "embed"), init="embed")
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0).astype(COMPUTE_DTYPE)
+    return shard(out, BATCH_AXES, None, None)
+
+
+def logits(table_or_head: jnp.ndarray, x: jnp.ndarray,
+           transpose: bool) -> jnp.ndarray:
+    """Final projection; vocab dim sharded over 'model'."""
+    w = table_or_head.astype(COMPUTE_DTYPE)
+    out = jnp.einsum("btd,vd->btv" if transpose else "btd,dv->btv", x, w)
+    return shard(out, BATCH_AXES, None, "model")
+
+
+def cross_entropy(lg: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token NLL with f32 logsumexp (vocab may be sharded)."""
+    lg = lg.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,215 @@
+"""Mamba2 / SSD blocks (arXiv:2405.21060) + the Zamba2 hybrid
+(arXiv:2411.15242): a Mamba2 backbone with ONE shared transformer block
+re-invoked every N layers.
+
+The SSD recurrence runs through ``kernels.ops.chunk_scan`` (GLA form,
+scalar-per-head decay broadcast over state channels).  Decode state:
+depthwise-conv tail (B, conv_dim-1, C) + matrix state (B*H, N, hd) --
+O(1) in context, so ``long_500k`` runs; at 500k the shared attention
+block operates in sliding-window mode (cfg.sliding_window).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.pspec import ParamDef, stack_tree
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.layers import AttnShape, COMPUTE_DTYPE
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim     # conv over (x, B, C)
+    return d_inner, n_heads, conv_ch
+
+
+def mamba_defs(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_ch = _dims(cfg)
+    in_dim = 2 * d_inner + 2 * s.state_dim + H   # z, x, B, C, dt
+    return {
+        "ln": L.rmsnorm_def(D),
+        "w_in": ParamDef((D, in_dim), ("embed", "mlp")),
+        "conv_w": ParamDef((s.conv_dim, conv_ch), ("conv", "mlp"), scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((H,), ("heads",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("heads",), init="ones"),
+        "out_norm": L.rmsnorm_def(d_inner),
+        "w_out": ParamDef((d_inner, D), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(xbc, w, b, tail):
+    """Depthwise causal conv; ``tail``: (B, conv_dim-1, C) carry or None."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros_like(xbc[:, :K - 1])
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)        # (B, T+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(K))
+    new_tail = xp[:, -(K - 1):] if tail is not None else None
+    return jax.nn.silu(out + b[None, None]), new_tail
+
+
+def mamba_mixer(cfg: ArchConfig, p, x, state, impl):
+    """One Mamba2 mixer.  state: None or {conv (B,K-1,C), S (B*H, N, hd)}."""
+    s = cfg.ssm
+    B, T, D = x.shape
+    d_inner, H, conv_ch = _dims(cfg)
+    N, hd = s.state_dim, s.head_dim
+    xc = L.rmsnorm(p["ln"], x, cfg.norm_eps).astype(COMPUTE_DTYPE)
+    proj = xc @ p["w_in"].astype(COMPUTE_DTYPE)
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_ch], axis=-1)
+    conv_tail = None if state is None else state["conv"]
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"].astype(COMPUTE_DTYPE),
+                                 p["conv_b"].astype(COMPUTE_DTYPE), conv_tail)
+    xs, Bs, Cs = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32)[None, None])
+    a = jnp.exp(-dt * jnp.exp(p["a_log"].astype(jnp.float32))[None, None])
+
+    # map to the chunk-scan form: per-head q=C, k=B (shared), v = x * dt
+    v = (xs.reshape(B, T, H, hd).astype(jnp.float32)
+         * dt[..., None]).transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    q = jnp.broadcast_to(Cs.astype(jnp.float32)[:, None], (B, H, T, N)
+                         ).reshape(B * H, T, N)
+    k = jnp.broadcast_to(Bs.astype(jnp.float32)[:, None], (B, H, T, N)
+                         ).reshape(B * H, T, N)
+    decay = jnp.broadcast_to(
+        a.transpose(0, 2, 1)[..., None], (B, H, T, N)).reshape(B * H, T, N)
+    s0 = None if state is None else state["S"]
+    o, s_new = ops.chunk_scan(q, k, v, decay, bonus=None, state=s0,
+                              chunk=s.chunk, impl=impl)
+    o = o.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+    o = o + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(B, T, H, hd).astype(jnp.float32)
+    o = o.reshape(B, T, d_inner).astype(COMPUTE_DTYPE)
+    o = L.rmsnorm(p["out_norm"], o * jax.nn.silu(z), cfg.norm_eps)
+    out = (o @ p["w_out"].astype(COMPUTE_DTYPE)).astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_tail.astype(state["conv"].dtype), "S": s_new}
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid: Mamba2 backbone + ONE shared attention block
+# ---------------------------------------------------------------------------
+def _attn_shape(cfg: ArchConfig) -> AttnShape:
+    return AttnShape(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def shared_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.rmsnorm_def(cfg.d_model),
+        "attn": L.attention_defs(cfg.d_model, _attn_shape(cfg)),
+        "ln2": L.rmsnorm_def(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    defs: dict[str, Any] = {
+        "embed": L.embed_defs(cfg.vocab, cfg.d_model),
+        "mamba_layers": stack_tree(mamba_defs(cfg), cfg.n_layers),
+        "ln_f": L.rmsnorm_def(cfg.d_model),
+        "head": ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+    if cfg.shared_attn_every:
+        defs["shared"] = shared_block_defs(cfg)
+    return defs
+
+
+def _shared_block(cfg, p, x, cache):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = L.attention_block(
+        p["attn"], h, shape=_attn_shape(cfg), rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window, cache=cache)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.act), new_cache
+
+
+def forward(cfg: ArchConfig, params, batch: dict, *, mode: str = "train",
+            cache=None, impl: str = "auto"):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = L.shard(x, L.BATCH_AXES, None, None)
+    remat = mode == "train"
+    every = cfg.shared_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // every
+    assert cfg.n_layers % every == 0
+
+    # reshape stacked mamba params (L, ...) -> (G, every, ...)
+    def regroup(t):
+        return t.reshape((n_groups, every) + t.shape[1:])
+
+    grouped = jax.tree.map(regroup, params["mamba_layers"])
+    m_state = None if cache is None else jax.tree.map(regroup, cache["mamba"])
+    a_cache = None if cache is None else cache["attn"]
+
+    def inner(carry, xs):
+        h = carry
+        p, st = xs
+        h, new_st = mamba_mixer(cfg, p, h, st, impl)
+        return h, new_st
+
+    def group(carry, xs):
+        h = carry
+        gp, gst, shared_cache = xs
+        h, new_st = L.scan_layers(inner, h, (gp, gst), length=every)
+        if cfg.shared_attn_every:
+            h, new_sc = _shared_block(cfg, params["shared"], h, shared_cache)
+        else:
+            new_sc = shared_cache
+        return h, (new_st, new_sc)
+
+    if remat:
+        group = jax.checkpoint(group)
+    x, (new_m, new_a) = L.scan_layers(group, x, (grouped, m_state, a_cache),
+                                      length=n_groups)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    lg = L.logits(params["head"], x, transpose=False)
+    new_cache = None
+    if cache is not None:
+        def ungroup(t):
+            return t.reshape((cfg.n_layers,) + t.shape[2:])
+        new_cache = {"mamba": jax.tree.map(ungroup, new_m), "attn": new_a}
+    return lg, new_cache, jnp.float32(0.0)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    s = cfg.ssm
+    d_inner, H, conv_ch = _dims(cfg)
+    m_one = {
+        "conv": jnp.zeros((batch, s.conv_dim - 1, conv_ch), COMPUTE_DTYPE),
+        "S": jnp.zeros((batch * H, s.state_dim, s.head_dim), jnp.float32),
+    }
+    out = {"mamba": jax.tree.map(
+        lambda x: jnp.stack([x] * cfg.n_layers), m_one)}
+    if cfg.shared_attn_every:
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        a_one = L.init_kv_cache(batch, max_len, _attn_shape(cfg))
+        out["attn"] = jax.tree.map(lambda x: jnp.stack([x] * n_groups), a_one)
+    else:
+        out["attn"] = None
+    return out
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict):
+    lg, _, _ = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return L.cross_entropy(lg[:, :-1], jnp.maximum(labels[:, 1:], 0),
+                           mask[:, 1:])

@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and KV are produced through low-rank latents; only the
+``kv_lora``-dim latent + shared rope key are cached at decode time
+(the MLA memory win: 512+64 floats/token vs 2*128*192 for plain MHA).
+
+Two execution forms:
+  * direct (train/prefill): latents are up-projected to per-head K/V and
+    standard attention runs;
+  * absorbed (decode): W_UK is folded into the query and W_UV into the
+    output projection, so attention runs directly in latent space and
+    NO per-step recomputation of the full K/V history is needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLACfg
+from repro.distributed.pspec import ParamDef
+from repro.models.layers import (
+    BATCH_AXES, COMPUTE_DTYPE, rmsnorm, rmsnorm_def, rope, shard,
+)
+
+
+def mla_defs(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    H, D = cfg.n_heads, cfg.d_model
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": ParamDef((D, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": rmsnorm_def(m.q_lora_rank),
+        "wq_b": ParamDef((m.q_lora_rank, H, qk), ("lora", "heads", "head_dim")),
+        "wkv_a": ParamDef((D, m.kv_lora_rank + m.qk_rope_dim), ("embed", "lora")),
+        "kv_norm": rmsnorm_def(m.kv_lora_rank),
+        "wk_b": ParamDef((m.kv_lora_rank, H, m.qk_nope_dim),
+                         ("lora", "heads", "head_dim")),
+        "wv_b": ParamDef((m.kv_lora_rank, H, m.v_head_dim),
+                         ("lora", "heads", "head_dim")),
+        "wo": ParamDef((H, m.v_head_dim, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_latents(p, x, m: MLACfg, cfg: ArchConfig):
+    xc = x.astype(COMPUTE_DTYPE)
+    q_lat = rmsnorm(p["q_norm"], xc @ p["wq_a"].astype(COMPUTE_DTYPE),
+                    cfg.norm_eps)
+    q = jnp.einsum("btl,lhd->bthd", q_lat, p["wq_b"].astype(COMPUTE_DTYPE))
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    kv = xc @ p["wkv_a"].astype(COMPUTE_DTYPE)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, :, None, :]   # shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(
+    p, x: jnp.ndarray, cfg: ArchConfig, *,
+    cache: dict | None = None,
+    absorbed: bool = True,
+) -> tuple[jnp.ndarray, dict | None]:
+    """MLA self-attention; cache holds {c_kv (B,S,R), k_rope (B,S,1,dr), len}."""
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _project_latents(p, x, m, cfg)
+
+    if cache is None:
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        q_rope = rope(q_rope, pos, cfg.rope_theta)
+        k_rope = rope(k_rope, pos, cfg.rope_theta)
+        k_nope = jnp.einsum("bsl,lhd->bshd", c_kv,
+                            p["wk_b"].astype(COMPUTE_DTYPE))
+        v = jnp.einsum("bsl,lhd->bshd", c_kv, p["wv_b"].astype(COMPUTE_DTYPE))
+        lg = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bthd,bsxd->bhts", q_rope,
+                           jnp.broadcast_to(k_rope, (B, T, 1, m.qk_rope_dim)),
+                           preferred_element_type=jnp.float32)) * scale
+        mask = jnp.tril(jnp.ones((T, T), bool))
+        lg = jnp.where(mask[None, None], lg, -1e30)
+        pr = jax.nn.softmax(lg, axis=-1).astype(COMPUTE_DTYPE)
+        out = jnp.einsum("bhts,bshd->bthd", pr, v)
+        new_cache = None
+    else:
+        cur = cache["len"]
+        pos = cur + jnp.arange(T)[None] + jnp.zeros((B, 1), jnp.int32)
+        q_rope = rope(q_rope, pos, cfg.rope_theta)
+        k_rope = rope(k_rope, pos, cfg.rope_theta)
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cur, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cur, axis=1)
+        S = ckv.shape[1]
+        if absorbed:
+            # fold W_UK into q: q_lat (B,T,H,R); attention in latent space
+            q_lat = jnp.einsum("bthd,lhd->bthl", q_nope,
+                               p["wk_b"].astype(COMPUTE_DTYPE))
+            lg = (jnp.einsum("bthl,bsl->bhts", q_lat, ckv,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bthd,bsxd->bhts", q_rope, ckr,
+                               preferred_element_type=jnp.float32)) * scale
+        else:
+            k_nope = jnp.einsum("bsl,lhd->bshd", ckv,
+                                p["wk_b"].astype(COMPUTE_DTYPE))
+            lg = (jnp.einsum("bthd,bshd->bhts", q_nope, k_nope,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bthd,bsxd->bhts", q_rope, ckr,
+                               preferred_element_type=jnp.float32)) * scale
+        qpos = cur + jnp.arange(T)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = (kpos <= qpos) & (kpos < cur + T)
+        lg = jnp.where(mask[None, None], lg, -1e30)
+        pr = jax.nn.softmax(lg, axis=-1).astype(COMPUTE_DTYPE)
+        if absorbed:
+            o_lat = jnp.einsum("bhts,bsl->bthl", pr, ckv)    # latent output
+            out = jnp.einsum("bthl,lhd->bthd", o_lat,
+                             p["wv_b"].astype(COMPUTE_DTYPE))
+        else:
+            v = jnp.einsum("bsl,lhd->bshd", ckv, p["wv_b"].astype(COMPUTE_DTYPE))
+            out = jnp.einsum("bhts,bshd->bthd", pr, v)
+        new_cache = {"c_kv": ckv, "k_rope": ckr, "len": cur + T}
+
+    out = shard(out, BATCH_AXES, None, "model", None)
+    out = jnp.einsum("bthd,hdo->bto", out, p["wo"].astype(COMPUTE_DTYPE))
+    return out.astype(x.dtype), new_cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=COMPUTE_DTYPE) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, 1, m.qk_rope_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

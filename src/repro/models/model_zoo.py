@@ -1,0 +1,110 @@
+"""Model registry: uniform API over the 10 assigned architectures.
+
+    zoo = get_model(cfg)
+    defs   = zoo.param_defs(cfg)                      # ParamDef tree
+    loss   = zoo.loss_fn(cfg, params, batch)          # train
+    lg, c  = zoo.prefill(cfg, params, batch, cache)   # inference-prefill
+    lg, c  = zoo.decode(cfg, params, batch, cache)    # one-token decode
+    cache  = zoo.init_cache(cfg, batch, max_len)
+    batch  = input_specs(cfg, shape)                  # ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Family, ShapeCfg
+from repro.distributed import pspec
+from repro.models import mamba2, rwkv, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Zoo:
+    param_defs: Callable
+    loss_fn: Callable
+    forward: Callable
+    init_cache: Callable
+
+
+def get_model(cfg: ArchConfig) -> Zoo:
+    if cfg.family == Family.SSM:
+        return Zoo(rwkv.param_defs, rwkv.loss_fn, rwkv.forward,
+                   rwkv.init_cache)
+    if cfg.family == Family.HYBRID:
+        return Zoo(mamba2.param_defs, mamba2.loss_fn, mamba2.forward,
+                   mamba2.init_cache)
+    if cfg.family == Family.AUDIO:
+        return Zoo(whisper.param_defs, whisper.loss_fn, whisper.forward,
+                   whisper.init_cache)
+    return Zoo(transformer.param_defs, transformer.loss_fn,
+               transformer.forward, transformer.init_cache)
+
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Total (or routing-active) parameter count from the ParamDef tree."""
+    defs = get_model(cfg).param_defs(cfg)
+    total = pspec.param_count(defs)
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        from repro.models.moe import padded_experts
+        E = padded_experts(m)
+        per_expert = 3 * cfg.d_model * m.d_ff_expert
+        n_moe_layers = cfg.n_layers - m.first_dense_layers
+        inactive = (E - m.top_k) * per_expert * n_moe_layers
+        total -= inactive
+    return total
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins -- no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict[str, Any]:
+    """Abstract inputs for a (train | prefill | decode) step.
+
+    Decode batches carry ONE new token; the KV/state cache of
+    ``shape.seq_len`` is built separately via ``abstract_cache``.
+    """
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        T = 1
+    elif cfg.family == Family.AUDIO:
+        T = max(shape.seq_len // cfg.dec_ratio, 8)   # decoder text length
+    elif cfg.family == Family.VLM and shape.kind != "decode":
+        T = shape.seq_len - cfg.n_image_tokens       # text tokens after prefix
+    else:
+        T = shape.seq_len
+    batch: dict[str, Any] = {"tokens": sds((B, T), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, T), jnp.int32)
+    if cfg.family == Family.AUDIO and shape.kind != "decode":
+        batch["frames"] = sds((B, shape.seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.family == Family.VLM and shape.kind != "decode":
+        batch["img_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeCfg):
+    """ShapeDtypeStruct tree of the decode cache (length = shape.seq_len)."""
+    zoo = get_model(cfg)
+    cache = jax.eval_shape(
+        lambda: zoo.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return cache
+
+
+def concrete_batch(cfg: ArchConfig, shape: ShapeCfg, seed: int = 0) -> dict:
+    """Materialised random batch (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, s in input_specs(cfg, shape).items():
+        if s.dtype == jnp.int32:
+            arr = rng.integers(0, cfg.vocab, size=s.shape).astype(np.int32)
+        else:
+            arr = rng.normal(size=s.shape).astype(np.float32)
+        out[name] = jnp.asarray(arr, s.dtype)
+    return out

@@ -1,0 +1,182 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP sharding.
+
+Dispatch is capacity-based scatter/gather (GShard-style dropping, MaxText
+convention): tokens are grouped (one group per sequence — groups ride the
+data axis), each group routes its tokens into per-expert buffers of
+capacity ``C = ceil(S * top_k / E * capacity_factor)`` via cumsum
+position assignment, expert GEMMs run as batched einsums over the expert
+dim (sharded on the "model" axis = expert parallelism; XLA inserts the
+all-to-alls at the data->expert sharding boundary), and outputs gather
+back with gate weighting.
+
+Experts whose count doesn't divide the EP axis are padded (e.g. Qwen's
+60 -> 64 on a 16-way axis); pad experts are masked out of routing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.distributed.pspec import ParamDef
+from repro.models.layers import COMPUTE_DTYPE, shard
+
+
+def padded_experts(m: MoECfg, ep: int = 16) -> int:
+    e = m.n_experts
+    return ((e + ep - 1) // ep) * ep if e % ep else e
+
+
+def moe_defs(d_model: int, m: MoECfg) -> dict:
+    E = padded_experts(m)
+    F = m.d_ff_expert
+    d = {
+        "router": ParamDef((d_model, E), ("embed", "expert")),
+        "wg": ParamDef((E, d_model, F), ("expert", "embed", "expert_mlp")),
+        "wu": ParamDef((E, d_model, F), ("expert", "embed", "expert_mlp")),
+        "wd": ParamDef((E, F, d_model), ("expert", "expert_mlp", "embed")),
+    }
+    if m.n_shared:
+        Fs = m.d_ff_shared
+        d["shared"] = {
+            "wg": ParamDef((d_model, Fs), ("embed", "mlp")),
+            "wu": ParamDef((d_model, Fs), ("embed", "mlp")),
+            "wd": ParamDef((Fs, d_model), ("mlp", "embed")),
+        }
+    return d
+
+
+def _moe_decode_einsum(p, x, m: MoECfg, E: int):
+    """§Perf decode path: einsum dispatch over ONE global token group.
+
+    The scatter/gather dispatch cannot be partitioned by GSPMD across
+    the (data -> expert) sharding boundary — measured ~1 GB/layer of
+    involuntary buffer replication at decode_32k.  One-hot EINSUM
+    dispatch partitions cleanly: the token contraction becomes a psum of
+    the small (E, C, D) buffer (~33 MB/layer for DeepSeek).  Dense
+    one-hot tensors are only affordable at decode token counts — the
+    wrapper routes here when B*T is small.
+    """
+    B, T, D = x.shape
+    N = B * T
+    k = m.top_k
+    xf = x.reshape(N, D).astype(COMPUTE_DTYPE)
+    logits = (xf @ p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    if E > m.n_experts:
+        logits = jnp.where(jnp.arange(E)[None] >= m.n_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                    # (N, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    C = min(N, max(int(N * k / m.n_experts * 2.0), 16))  # dropless at decode
+    oh = jax.nn.one_hot(eidx, E, dtype=jnp.int32)           # (N, k, E)
+    pos = jnp.cumsum(oh.reshape(N * k, E), axis=0).reshape(N, k, E) - 1
+    pos = (pos * oh).sum(-1)                                # (N, k)
+    keep = pos < C
+    # dispatch mask (N, k, E, C) -> combine over k: (N, E, C)
+    disp = (oh[..., None] * jax.nn.one_hot(jnp.where(keep, pos, C - 1), C,
+                                           dtype=jnp.int32)[:, :, None, :])
+    disp = disp * keep[:, :, None, None].astype(jnp.int32)
+    gated = (disp * gate[:, :, None, None]).sum(1)          # (N, E, C) f32
+    disp_b = disp.sum(1).astype(COMPUTE_DTYPE)              # (N, E, C)
+    buf = jnp.einsum("nec,nd->ecd", disp_b, xf)
+    buf = shard(buf, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               p["wg"].astype(COMPUTE_DTYPE)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(COMPUTE_DTYPE))
+    h = shard(h, "model", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(COMPUTE_DTYPE))
+    out = jnp.einsum("nec,ecd->nd", gated.astype(COMPUTE_DTYPE), out_buf)
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(eidx, E).sum(axis=1).mean(axis=0)
+    aux = (me * ce).sum() * m.n_experts
+    if m.n_shared:
+        s = p["shared"]
+        g = jax.nn.silu(xf @ s["wg"].astype(COMPUTE_DTYPE))
+        out = out + (g * (xf @ s["wu"].astype(COMPUTE_DTYPE))
+                     ) @ s["wd"].astype(COMPUTE_DTYPE)
+    return out.reshape(B, T, D).astype(x.dtype), aux.astype(jnp.float32)
+
+
+_DECODE_EINSUM_MAX_TOKENS = 1024
+_EINSUM_DECODE = True    # §Perf switch; base dry-run layout disables it
+
+
+def set_einsum_decode(v: bool) -> None:
+    global _EINSUM_DECODE
+    _EINSUM_DECODE = bool(v)
+
+
+def moe_ffn(p, x: jnp.ndarray, m: MoECfg,
+            dropless: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (out (B, T, D), aux load-balance loss scalar).
+
+    ``dropless``: inference mode — capacity is widened to min(T, 16 x
+    the balanced load), so no token drops at small/decode batch sizes
+    (prefix-causal serving); at very long prefill this caps the buffer
+    and reverts to (mild) capacity dropping, documented in DESIGN.md.
+    """
+    B, T, D = x.shape
+    E = p["router"].shape[1]
+    if dropless and _EINSUM_DECODE and B * T <= _DECODE_EINSUM_MAX_TOKENS:
+        return _moe_decode_einsum(p, x, m, E)
+    k = m.top_k
+    C = max(int(T * k / m.n_experts * m.capacity_factor), 1)
+    if dropless:
+        C = min(T, max(C, 16))
+    xc = x.astype(COMPUTE_DTYPE)
+
+    # --- routing (f32) ----------------------------------------------------
+    logits = jnp.einsum("btd,de->bte", xc, p["router"].astype(COMPUTE_DTYPE)
+                        ).astype(jnp.float32)
+    if E > m.n_experts:   # mask pad experts out of routing
+        pad_mask = jnp.arange(E) >= m.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalise
+
+    # aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jax.nn.one_hot(expert_idx, E).sum(axis=2).mean(axis=(0, 1))
+    aux = (me * ce).sum() * m.n_experts
+
+    # --- capacity assignment (per group = per sequence) --------------------
+    oh = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)      # (B, T, k, E)
+    # order: token-major then slot-major, standard GShard priority
+    ohf = oh.reshape(B, T * k, E)
+    pos = jnp.cumsum(ohf, axis=1) - 1                        # (B, T*k, E)
+    pos = (pos * ohf).sum(-1).reshape(B, T, k)               # (B, T, k)
+    keep = pos < C
+    eidx = expert_idx                                        # (B, T, k)
+
+    # --- dispatch: scatter tokens into (B, E, C, D) buffers ----------------
+    buf = jnp.zeros((B, E, C, D), COMPUTE_DTYPE)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, T, k))
+    pos_c = jnp.where(keep, pos, C - 1)
+    contrib = jnp.where(keep[..., None],
+                        jnp.broadcast_to(xc[:, :, None, :], (B, T, k, D)), 0.0)
+    buf = buf.at[bidx, eidx, pos_c].add(contrib)
+    buf = shard(buf, ("pod", "data"), "model", None, None)   # EP boundary
+
+    # --- expert GEMMs (batched over experts; EP on "model") ----------------
+    wg = p["wg"].astype(COMPUTE_DTYPE)
+    wu = p["wu"].astype(COMPUTE_DTYPE)
+    wd = p["wd"].astype(COMPUTE_DTYPE)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg))
+    h = h * jnp.einsum("becd,edf->becf", buf, wu)
+    h = shard(h, ("pod", "data"), "model", None, None)
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)
+    out_buf = shard(out_buf, ("pod", "data"), "model", None, None)
+
+    # --- combine: gather back + gate-weighted sum over k -------------------
+    gathered = out_buf[bidx, eidx, pos_c]                    # (B, T, k, D)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    out = (gathered * gate_vals[..., None].astype(COMPUTE_DTYPE)).sum(axis=2)
+
+    if m.n_shared:
+        s = p["shared"]
+        g = jax.nn.silu(xc @ s["wg"].astype(COMPUTE_DTYPE))
+        out = out + (g * (xc @ s["wu"].astype(COMPUTE_DTYPE))
+                     ) @ s["wd"].astype(COMPUTE_DTYPE)
+    return out.astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,187 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free decoder with
+data-dependent per-channel decay, executed through the chunked
+linear-recurrence kernel (``kernels.ops.chunk_scan``, bonus form).
+
+Decode state per layer: time-mix token-shift (B, D), channel-mix
+token-shift (B, D), and the recurrent matrix state (B, H, dk, dv) --
+O(1) in context length, which is what makes the ``long_500k`` cell
+runnable (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.pspec import ParamDef, stack_tree
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.layers import COMPUTE_DTYPE
+
+LORA_RANK = 32
+DECAY_LORA_RANK = 64
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def _head_dims(cfg: ArchConfig) -> tuple[int, int]:
+    hd = cfg.ssm.head_dim
+    return cfg.d_model // hd, hd
+
+
+def _layer_defs(cfg: ArchConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = _head_dims(cfg)
+    tm: dict[str, Any] = {
+        "mu_x": ParamDef((D,), ("embed",), init="zeros"),
+        "w0": ParamDef((D,), ("embed",), init="zeros"),
+        "decay_a": ParamDef((D, DECAY_LORA_RANK), ("embed", "lora"), scale=0.01),
+        "decay_b": ParamDef((DECAY_LORA_RANK, D), ("lora", "embed"), scale=0.01),
+        "bonus": ParamDef((H, hd), ("heads", "head_dim"), init="zeros"),
+        "wo": ParamDef((D, D), ("heads", "embed")),
+    }
+    for m in _MIX:
+        tm[f"mu_{m}"] = ParamDef((D,), ("embed",), init="zeros")
+        tm[f"lora_a_{m}"] = ParamDef((D, LORA_RANK), ("embed", "lora"), scale=0.01)
+        tm[f"lora_b_{m}"] = ParamDef((LORA_RANK, D), ("lora", "embed"), scale=0.01)
+        if m != "w":
+            tm[f"w_{m}"] = ParamDef((D, D), ("embed", "heads"))
+    cm = {
+        "mu_k": ParamDef((D,), ("embed",), init="zeros"),
+        "mu_r": ParamDef((D,), ("embed",), init="zeros"),
+        "wk": ParamDef((D, F), ("embed", "mlp")),
+        "wv": ParamDef((F, D), ("mlp", "embed")),
+        "wr": ParamDef((D, D), ("embed", "heads")),
+    }
+    return {"ln1": L.rmsnorm_def(D), "tm": tm,
+            "ln2": L.rmsnorm_def(D), "cm": cm}
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embed_defs(cfg.vocab, cfg.d_model),
+        "layers": stack_tree(_layer_defs(cfg), cfg.n_layers),
+        "ln_f": L.rmsnorm_def(cfg.d_model),
+        "head": ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None) -> jnp.ndarray:
+    """Token shift: x_{t-1}; position 0 uses carried state (or zero)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, name, x, xs_delta, xxx):
+    mu = p[f"mu_{name}"].astype(COMPUTE_DTYPE)
+    lora = jnp.tanh(xxx @ p[f"lora_a_{name}"].astype(COMPUTE_DTYPE))
+    lora = lora @ p[f"lora_b_{name}"].astype(COMPUTE_DTYPE)
+    return x + xs_delta * (mu + lora)
+
+
+def _time_mix(cfg, p, x, state, impl):
+    """state: None (train) or dict {shift (B, D), S (B*H, dk, dv)}."""
+    B, T, D = x.shape
+    H, hd = _head_dims(cfg)
+    xc = x.astype(COMPUTE_DTYPE)
+    prev = None if state is None else state["shift"]
+    xs_delta = _shift(xc, prev) - xc
+    xxx = xc + xs_delta * p["mu_x"].astype(COMPUTE_DTYPE)
+    r = _ddlerp(p, "r", xc, xs_delta, xxx) @ p["w_r"].astype(COMPUTE_DTYPE)
+    k = _ddlerp(p, "k", xc, xs_delta, xxx) @ p["w_k"].astype(COMPUTE_DTYPE)
+    v = _ddlerp(p, "v", xc, xs_delta, xxx) @ p["w_v"].astype(COMPUTE_DTYPE)
+    g = _ddlerp(p, "g", xc, xs_delta, xxx) @ p["w_g"].astype(COMPUTE_DTYPE)
+    xw = _ddlerp(p, "w", xc, xs_delta, xxx)
+    wlog = (p["w0"].astype(jnp.float32)
+            + (jnp.tanh(xw @ p["decay_a"].astype(COMPUTE_DTYPE))
+               @ p["decay_b"].astype(COMPUTE_DTYPE)).astype(jnp.float32))
+    decay = jnp.exp(-jnp.exp(wlog))                        # (B, T, D) in (0,1)
+
+    def heads(t):  # (B, T, D) -> (B*H, T, hd)
+        return (t.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+                .reshape(B * H, T, hd))
+
+    bonus = jnp.broadcast_to(p["bonus"].astype(jnp.float32)[None],
+                             (B, H, hd)).reshape(B * H, hd)
+    s0 = None if state is None else state["S"]
+    o, s_new = ops.chunk_scan(
+        heads(r).astype(jnp.float32), heads(k).astype(jnp.float32),
+        heads(v).astype(jnp.float32), heads(decay),
+        bonus=bonus, state=s0, chunk=cfg.ssm.chunk, impl=impl)
+    o = (o.reshape(B, H, T, hd).transpose(0, 2, 1, 3).reshape(B, T, D))
+    o = L.groupnorm(o, H, eps=64e-5) * jax.nn.silu(g)
+    out = (o.astype(COMPUTE_DTYPE) @ p["wo"].astype(COMPUTE_DTYPE)).astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = {"shift": xc[:, -1, :], "S": s_new}
+    return out, new_state
+
+
+def _channel_mix(p, x, state):
+    xc = x.astype(COMPUTE_DTYPE)
+    prev = None if state is None else state["shift"]
+    xs_delta = _shift(xc, prev) - xc
+    xk = xc + xs_delta * p["mu_k"].astype(COMPUTE_DTYPE)
+    xr = xc + xs_delta * p["mu_r"].astype(COMPUTE_DTYPE)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(COMPUTE_DTYPE)))
+    k = L.shard(k, L.BATCH_AXES, None, "model")
+    kv = k @ p["wv"].astype(COMPUTE_DTYPE)
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(COMPUTE_DTYPE)) * kv
+    new_state = None if state is None else {"shift": xc[:, -1, :]}
+    return out.astype(x.dtype), new_state
+
+
+def _block(cfg, p, x, state, impl):
+    tm_state = None if state is None else state["tm"]
+    cm_state = None if state is None else state["cm"]
+    a, tm_new = _time_mix(cfg, p["tm"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          tm_state, impl)
+    x = x + a
+    b, cm_new = _channel_mix(p["cm"], L.rmsnorm(p["ln2"], x, cfg.norm_eps),
+                             cm_state)
+    x = x + b
+    new_state = None if state is None else {"tm": tm_new, "cm": cm_new}
+    return x, new_state
+
+
+def forward(cfg: ArchConfig, params, batch: dict, *, mode: str = "train",
+            cache=None, impl: str = "auto"):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    x = L.shard(x, L.BATCH_AXES, None, None)
+    remat = mode == "train"
+
+    def body(carry, xs):
+        h = carry
+        p, st = xs
+        h, new_st = _block(cfg, p, h, st, impl)
+        return h, new_st
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, new_states = L.scan_layers(body, x, (params["layers"], cache),
+                                  length=cfg.n_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    lg = L.logits(params["head"], x, transpose=False)
+    return lg, new_states, jnp.float32(0.0)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Recurrent state -- O(1) in ``max_len`` (the SSM long-context win)."""
+    del max_len
+    H, hd = _head_dims(cfg)
+    one = {
+        "tm": {"shift": jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE),
+               "S": jnp.zeros((batch * H, hd, hd), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, cfg.d_model), COMPUTE_DTYPE)},
+    }
+    return jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), one)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict):
+    lg, _, _ = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return L.cross_entropy(lg[:, :-1], jnp.maximum(labels[:, 1:], 0),
+                           mask[:, 1:])

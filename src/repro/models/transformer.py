@@ -1,0 +1,211 @@
+"""Generic decoder-only transformer covering the dense/GQA family
+(tinyllama, minitron, granite, stablelm), the MoE family (qwen2-moe,
+deepseek-v2 incl. MLA), and the VLM backbone (paligemma prefix-LM).
+
+Layers are homogeneous and scanned (stacked params -> one compiled block,
+O(1) HLO size in depth); DeepSeek's leading dense-FFN layer(s) run
+outside the scan.  Training wraps the block in ``jax.checkpoint``
+(configurable remat policy).
+
+Modes:
+  train   — causal forward, next-token CE loss
+  prefill — causal forward filling a KV cache of length seq_len
+  decode  — T new tokens against an existing cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.distributed.pspec import ParamDef, stack_tree
+from repro.models import layers as L
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models.layers import AttnShape, COMPUTE_DTYPE
+
+REMAT_POLICY = jax.checkpoint_policies.save_only_these_names(
+    "attn_out", "mlp_out")
+
+# §Perf: remat is a memory<->compute trade.  Under the FSDP-2D train
+# layout the per-chip activation footprint is small (batch 1 seq/chip),
+# so remat only wastes FLOPs and an extra FSDP weight-gather pass.
+_USE_REMAT = True
+
+
+def set_remat(v: bool) -> None:
+    global _USE_REMAT
+    _USE_REMAT = bool(v)
+
+
+def _attn_shape(cfg: ArchConfig) -> AttnShape:
+    return AttnShape(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def _layer_defs(cfg: ArchConfig, dense_ffn_width: int | None = None) -> dict:
+    d: dict[str, Any] = {"ln1": L.rmsnorm_def(cfg.d_model),
+                         "ln2": L.rmsnorm_def(cfg.d_model)}
+    if cfg.mla is not None:
+        d["attn"] = mla_lib.mla_defs(cfg)
+    else:
+        d["attn"] = L.attention_defs(cfg.d_model, _attn_shape(cfg))
+    if dense_ffn_width is not None:
+        d["mlp"] = L.mlp_defs(cfg.d_model, dense_ffn_width, cfg.act)
+    elif cfg.moe is not None:
+        d["moe"] = moe_lib.moe_defs(cfg.d_model, cfg.moe)
+    else:
+        d["mlp"] = L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act)
+    return d
+
+
+def _n_dense_lead(cfg: ArchConfig) -> int:
+    return cfg.moe.first_dense_layers if cfg.moe else 0
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    n_lead = _n_dense_lead(cfg)
+    defs: dict[str, Any] = {
+        "embed": L.embed_defs(cfg.vocab, cfg.d_model),
+        "layers": stack_tree(_layer_defs(cfg), cfg.n_layers - n_lead),
+        "ln_f": L.rmsnorm_def(cfg.d_model),
+    }
+    if n_lead:
+        defs["lead_layers"] = stack_tree(
+            _layer_defs(cfg, dense_ffn_width=cfg.moe.d_ff_dense), n_lead)
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    if cfg.n_image_tokens:
+        # stub projection applied to precomputed patch embeddings
+        defs["img_proj"] = ParamDef((cfg.d_model, cfg.d_model),
+                                    ("embed", None))
+    return defs
+
+
+def _block(cfg: ArchConfig, p, x, cache, *, mode: str, prefix_len=0):
+    """One decoder layer.  cache: per-layer dict or None."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, new_cache = mla_lib.mla_attention(
+            p["attn"], h, cfg, cache=cache,
+            absorbed=(mode == "decode"))
+    else:
+        attn_out, new_cache = L.attention_block(
+            p["attn"], h, shape=_attn_shape(cfg), rope_theta=cfg.rope_theta,
+            prefix_len=prefix_len, window=cfg.sliding_window, cache=cache)
+    attn_out = checkpoint_name(attn_out, "attn_out")
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        ffn_out, aux = moe_lib.moe_ffn(p["moe"], h, cfg.moe,
+                                       dropless=(mode != "train"))
+    else:
+        ffn_out, aux = L.mlp(p["mlp"], h, cfg.act), jnp.float32(0.0)
+    ffn_out = checkpoint_name(ffn_out, "mlp_out")
+    return x + ffn_out, new_cache, aux
+
+
+def _scan_layers(cfg, stacked, x, caches, *, mode, prefix_len, remat):
+    """lax.scan over stacked layer params (and stacked caches)."""
+    block = functools.partial(_block, cfg, mode=mode, prefix_len=prefix_len)
+    if remat and _USE_REMAT:
+        block = jax.checkpoint(block, policy=REMAT_POLICY)
+
+    def body(carry, xs):
+        x, aux = carry
+        p, cache = xs
+        x, new_cache, a = block(p, x, cache)
+        return (x, aux + a), new_cache
+
+    (x, aux), new_caches = L.scan_layers(body, (x, jnp.float32(0.0)),
+                                         (stacked, caches))
+    return x, aux, new_caches
+
+
+def forward(
+    cfg: ArchConfig,
+    params,
+    batch: dict,
+    *,
+    mode: str = "train",
+    cache=None,
+):
+    """Returns (logits, new_cache, aux_loss).
+
+    batch: tokens (B, T) int32; optionally img_embeds (B, N_img, D) for
+    the VLM (prefix-LM over the image span).
+    """
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    prefix_len = 0
+    if cfg.n_image_tokens and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(COMPUTE_DTYPE)
+        img = img @ params["img_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([img, x], axis=1)
+        prefix_len = cfg.n_image_tokens
+        T = x.shape[1]
+    if cfg.arch_id.startswith("paligemma") or cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma convention
+    x = L.shard(x, L.BATCH_AXES, None, None)
+
+    remat = mode == "train"
+    aux = jnp.float32(0.0)
+    n_lead = _n_dense_lead(cfg)
+    if n_lead:
+        lead_cache = None if cache is None else cache["lead"]
+        x, a, new_lead = _scan_layers(
+            cfg, params["lead_layers"], x, lead_cache,
+            mode=mode, prefix_len=prefix_len, remat=remat)
+        aux += a
+    scan_cache = None if cache is None else cache["layers"]
+    x, a, new_caches = _scan_layers(
+        cfg, params["layers"], x, scan_cache,
+        mode=mode, prefix_len=prefix_len, remat=remat)
+    aux += a
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        lg = L.logits(params["embed"], x, transpose=True)
+    else:
+        lg = L.logits(params["head"], x, transpose=False)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": new_caches}
+        if n_lead:
+            new_cache["lead"] = new_lead
+    return lg, new_cache, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Stacked (L, ...) caches for the scanned layers."""
+    def one(n):
+        if cfg.mla is not None:
+            c = mla_lib.init_mla_cache(cfg, batch, max_len)
+        else:
+            c = L.init_kv_cache(batch, max_len, _attn_shape(cfg))
+        return jax.tree.map(lambda x: jnp.stack([x] * n), c)
+
+    n_lead = _n_dense_lead(cfg)
+    out = {"layers": one(cfg.n_layers - n_lead)}
+    if n_lead:
+        out["lead"] = one(n_lead)
+    return out
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict):
+    lg, _, aux = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    if cfg.n_image_tokens and "img_embeds" in batch:
+        # loss only over text positions
+        pad = jnp.full((labels.shape[0], cfg.n_image_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = L.cross_entropy(lg[:, :-1], jnp.maximum(labels[:, 1:], 0),
+                           mask[:, 1:])
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux / cfg.n_layers
+    return loss

@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, T_enc, d_model).  Encoder: bidirectional
+self-attention with sinusoidal positions.  Decoder: causal self-attention
++ cross-attention to the encoder output, learned positions.  Decode
+caches both the self-attention KV and the (fixed) cross-attention KV.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.pspec import ParamDef, stack_tree
+from repro.models import layers as L
+from repro.models.layers import AttnShape, COMPUTE_DTYPE
+
+MAX_DEC_POS = 65536   # covers decode_32k; whisper's 448 is a runtime limit
+
+
+def _shape(cfg: ArchConfig) -> AttnShape:
+    return AttnShape(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def _enc_layer_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.rmsnorm_def(cfg.d_model),
+        "attn": L.attention_defs(cfg.d_model, _shape(cfg)),
+        "ln2": L.rmsnorm_def(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_defs(cfg: ArchConfig) -> dict:
+    d = _enc_layer_defs(cfg)
+    d["ln_x"] = L.rmsnorm_def(cfg.d_model)
+    d["xattn"] = L.attention_defs(cfg.d_model, _shape(cfg))
+    return d
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embed_defs(cfg.vocab, cfg.d_model),
+        "dec_pos": ParamDef((MAX_DEC_POS, cfg.d_model), (None, "embed"),
+                            init="embed"),
+        "enc_layers": stack_tree(_enc_layer_defs(cfg), cfg.enc_layers),
+        "dec_layers": stack_tree(_dec_layer_defs(cfg), cfg.n_layers),
+        "ln_enc": L.rmsnorm_def(cfg.d_model),
+        "ln_f": L.rmsnorm_def(cfg.d_model),
+    }
+
+
+def _sinusoid(T: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / (d // 2)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block(cfg, p, x):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, _ = L.attention_block(p["attn"], h, shape=_shape(cfg), rope_theta=0.0,
+                             causal=False)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.act)
+
+
+def encode(cfg: ArchConfig, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T_enc, d_model) stub embeddings -> encoder output."""
+    x = frames.astype(COMPUTE_DTYPE) + _sinusoid(
+        frames.shape[1], cfg.d_model).astype(COMPUTE_DTYPE)[None]
+    x = L.shard(x, L.BATCH_AXES, None, None)
+
+    def body(carry, p):
+        return _enc_block(cfg, p, carry), None
+
+    body_fn = jax.checkpoint(body)
+    x, _ = L.scan_layers(body_fn, x, params["enc_layers"],
+                         length=cfg.enc_layers)
+    return L.rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _xattn_kv(p, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(COMPUTE_DTYPE))
+    return k, v
+
+
+def _dec_block(cfg, p, x, enc_out, cache, xkv=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = L.attention_block(
+        p["attn"], h, shape=_shape(cfg), rope_theta=0.0, cache=cache)
+    x = x + a
+    # cross attention (precomputed KV at decode time)
+    h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    q = jnp.einsum("btd,dhk->bthk", h.astype(COMPUTE_DTYPE),
+                   p["xattn"]["wq"].astype(COMPUTE_DTYPE))
+    if xkv is None:
+        k, v = _xattn_kv(p["xattn"], enc_out)
+    else:
+        k, v = xkv
+    a = L.attend(q, k, v, causal=False)
+    a = jnp.einsum("bthk,hkd->btd", a, p["xattn"]["wo"].astype(COMPUTE_DTYPE))
+    x = x + a.astype(x.dtype)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, cfg.act), new_cache
+
+
+def forward(cfg: ArchConfig, params, batch: dict, *, mode: str = "train",
+            cache=None):
+    """batch: frames (B, T_enc, D) [train/prefill], tokens (B, T_dec)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    if "frames" in batch:
+        # train/prefill: run the encoder; at prefill also precompute the
+        # per-layer cross-attention KV and store it in the cache
+        enc_out = encode(cfg, params, batch["frames"])
+        xkv_fresh = None
+        if cache is not None:
+            xkv_fresh = jax.lax.map(
+                lambda p: _xattn_kv(p["xattn"], enc_out),
+                params["dec_layers"])
+    else:
+        enc_out = cache["enc_out"]
+        xkv_fresh = None
+    offset = 0 if cache is None else cache["len"]
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], offset if cache is not None else 0, T, axis=0)
+    x = L.embed(params["embed"], tokens) + pos_emb[None].astype(COMPUTE_DTYPE)
+    x = L.shard(x, L.BATCH_AXES, None, None)
+
+    self_cache = None if cache is None else cache["self"]
+    xkv_cache = None if cache is None else (
+        xkv_fresh if xkv_fresh is not None else cache["xkv"])
+
+    def body(carry, xs):
+        h = carry
+        p, sc, xkv = xs
+        h, new_sc = _dec_block(cfg, p, h, enc_out, sc, xkv)
+        return h, new_sc
+
+    if mode == "train":
+        body = jax.checkpoint(body)
+    x, new_self = L.scan_layers(body, x,
+                                (params["dec_layers"], self_cache, xkv_cache),
+                                length=cfg.n_layers)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    lg = L.logits(params["embed"], x, transpose=True)   # tied head
+    new_cache = None
+    if cache is not None:
+        new_cache = {"self": new_self, "xkv": xkv_cache,
+                     "enc_out": enc_out, "len": cache["len"] + T}
+    return lg, new_cache, jnp.float32(0.0)
+
+
+def make_cache(cfg: ArchConfig, params, frames: jnp.ndarray,
+               max_len: int) -> dict:
+    """Build the decode cache: encoder output + per-layer cross KV."""
+    enc_out = encode(cfg, params, frames)
+
+    xkv = jax.lax.map(lambda p: _xattn_kv(p["xattn"], enc_out),
+                      params["dec_layers"])
+    B = frames.shape[0]
+    self_one = L.init_kv_cache(B, max_len, _shape(cfg))
+    self_c = jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), self_one)
+    return {"self": self_c, "xkv": xkv, "enc_out": enc_out,
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Shape-only cache (dry-run): encoder length = max_len // dec_ratio...
+    encoder output and cross-KV sized by the shape's frame count."""
+    t_enc = max(max_len // cfg.dec_ratio, 1)
+    self_one = L.init_kv_cache(batch, max_len, _shape(cfg))
+    self_c = jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), self_one)
+    sh = _shape(cfg)
+    xkv = (jnp.zeros((cfg.n_layers, batch, t_enc, sh.n_kv, sh.d_head),
+                     COMPUTE_DTYPE),
+           jnp.zeros((cfg.n_layers, batch, t_enc, sh.n_kv, sh.d_head),
+                     COMPUTE_DTYPE))
+    return {"self": self_c, "xkv": xkv,
+            "enc_out": jnp.zeros((batch, t_enc, cfg.d_model), COMPUTE_DTYPE),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict):
+    lg, _, _ = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return L.cross_entropy(lg[:, :-1], jnp.maximum(labels[:, 1:], 0),
+                           mask[:, 1:])

@@ -1,0 +1,127 @@
+"""Continuous batching over a fixed slot pool.
+
+The SpliDT analogy is deliberate (DESIGN.md §4): a switch supports
+millions of flows with a FIXED register pool, time-sharing state across
+flows; this server supports an open request stream with a FIXED pool of
+B cache slots, admitting new requests into freed slots every step.
+Admission hashes request ids into the slot table exactly like the
+paper's CRC-indexed flow store.
+
+Per engine tick:
+  1. admit: pop queued requests into free slots (per-slot prefill);
+  2. decode: ONE batched decode step over all live slots;
+  3. retire: slots whose request hit EOS/max_len free their registers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    eos: int = -1
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    ticks: int = 0
+    admitted: int = 0
+    completed: int = 0
+    decode_tokens: int = 0
+    slot_occupancy: list = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatcher:
+    """CPU-scale reference engine (reduced configs; the sharded path uses
+    the same step functions under the production mesh)."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int,
+                 max_len: int, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        zoo = model_zoo.get_model(cfg)
+        # one cache per slot (batch=1) -> admission never reshapes others
+        self.caches = [zoo.init_cache(cfg, 1, max_len) for _ in range(slots)]
+        self.live: list[Request | None] = [None] * slots
+        self.last_tok = np.zeros((slots, 1), np.int32)
+        self.queue: deque[Request] = deque()
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg, temperature))
+        self.zoo = zoo
+        self.rng = jax.random.key(seed)
+        self.stats = EngineStats()
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- engine tick --------------------------------------------------------
+    def tick(self):
+        self._admit()
+        self._decode_all()
+        self._retire()
+        self.stats.ticks += 1
+        self.stats.slot_occupancy.append(
+            sum(r is not None for r in self.live))
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.live[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            cache = self.zoo.init_cache(self.cfg, 1, self.max_len)
+            toks = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+            lg, cache = self.prefill(self.params, {"tokens": toks}, cache)
+            nxt = int(jnp.argmax(lg[0, -1]))
+            self.caches[s] = cache
+            self.live[s] = req
+            req.out.append(nxt)
+            self.last_tok[s, 0] = nxt
+            self.stats.admitted += 1
+
+    def _decode_all(self):
+        for s in range(self.slots):
+            req = self.live[s]
+            if req is None or req.done:
+                continue
+            self.rng, sub = jax.random.split(self.rng)
+            nxt, cache = self.decode(
+                self.params, jnp.asarray(self.last_tok[s:s + 1]),
+                self.caches[s], sub)
+            self.caches[s] = cache
+            tok = int(nxt[0, 0])
+            req.out.append(tok)
+            self.last_tok[s, 0] = tok
+            self.stats.decode_tokens += 1
+
+    def _retire(self):
+        for s in range(self.slots):
+            req = self.live[s]
+            if req is None:
+                continue
+            if (len(req.out) >= req.max_new
+                    or (req.eos >= 0 and req.out and req.out[-1] == req.eos)):
+                req.done = True
+                self.live[s] = None      # register reuse: slot freed
+                self.stats.completed += 1
+
+    def run_until_drained(self, max_ticks: int = 1000) -> EngineStats:
+        while (self.queue or any(self.live)) and self.stats.ticks < max_ticks:
+            self.tick()
+        return self.stats

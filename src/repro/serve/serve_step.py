@@ -1,0 +1,43 @@
+"""Serving steps: prefill + decode with greedy/temperature sampling.
+
+``make_prefill_step`` / ``make_decode_step`` return jit-able pure
+functions used both by the dry-run (AOT lowering on the production
+mesh) and the continuous-batching engine (CPU, reduced configs).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model_zoo
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    zoo = model_zoo.get_model(cfg)
+
+    def prefill(params, batch, cache):
+        lg, cache, _ = zoo.forward(cfg, params, batch, mode="prefill",
+                                   cache=cache)
+        return lg[:, -1:], cache         # next-token logits only
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, temperature: float = 0.0) -> Callable:
+    zoo = model_zoo.get_model(cfg)
+
+    def decode(params, tokens, cache, rng):
+        """tokens: (B, 1) last sampled tokens -> (next (B, 1), cache)."""
+        lg, cache, _ = zoo.forward(cfg, params, {"tokens": tokens},
+                                   mode="decode", cache=cache)
+        lg = lg[:, -1, :].astype(jnp.float32)
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache
+
+    return decode

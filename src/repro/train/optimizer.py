@@ -1,0 +1,95 @@
+"""AdamW + schedules, pure JAX (no optax offline).
+
+Optimizer state mirrors the parameter tree (same shapes), so the FSDP
+parameter shardings apply verbatim to ``mu``/``nu`` -- ZeRO-style
+sharded optimizer state falls out of the sharding rules for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray          # () int32
+    params: Any
+    mu: Any
+    nu: Any
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.mu, self.nu), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> TrainState:
+        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          mu=zeros(), nu=zeros())
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, state: TrainState, grads) -> tuple[TrainState, dict]:
+        # global-norm clip (f32)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self._lr(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p - lr * delta.astype(p.dtype)).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(state.params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return TrainState(step=step, params=new_p, mu=new_m, nu=new_v), metrics

@@ -1,0 +1,71 @@
+"""Feature semantics: numpy oracle vs the engine's jnp math."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import features as F
+from repro.kernels.ref import feature_window_ref
+
+
+def random_packets(rng, b, w):
+    pk = np.zeros((b, w, F.PKT_NFIELDS), np.float32)
+    pk[..., F.PKT_TS] = np.cumsum(rng.random((b, w)), axis=1)
+    pk[..., F.PKT_SIZE] = rng.integers(40, 1500, (b, w))
+    pk[..., F.PKT_DIR] = rng.integers(0, 2, (b, w))
+    pk[..., F.PKT_FLAGS] = rng.integers(0, 64, (b, w))
+    pk[..., F.PKT_IAT] = rng.random((b, w))
+    valid_len = rng.integers(1, w + 1, b)
+    pk[..., F.PKT_VALID] = (np.arange(w)[None] < valid_len[:, None])
+    return pk
+
+
+def test_registry_size_matches_paper_d1():
+    assert F.N_FEATURES == 41     # D1's N in the paper
+
+
+def test_all_ops_and_preds_covered():
+    ops = {s.op for s in F.REGISTRY}
+    assert {F.OP_COUNT, F.OP_SUM, F.OP_MAX, F.OP_MIN, F.OP_LAST,
+            F.OP_FIRST, F.OP_SUMSQ} <= ops
+    assert F.max_dep_depth(range(F.N_FEATURES)) <= 3   # paper: <= 3 stages
+
+
+@pytest.mark.parametrize("fid", range(0, F.N_FEATURES, 5))
+def test_numpy_vs_jnp_engine_math(fid):
+    rng = np.random.default_rng(fid)
+    pk = random_packets(rng, 32, 24)
+    spec = F.REGISTRY[fid]
+    oracle = F.compute_feature(pk, spec)
+    n = pk.shape[0]
+    row = lambda v: jnp.full((n, 1), v, jnp.int32)
+    out = feature_window_ref(
+        jnp.asarray(pk), row(spec.op), row(spec.field), row(spec.pred),
+        jnp.full((n, 1), spec.init_value, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out)[:, 0], oracle, rtol=1e-5,
+                               atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+def test_count_sum_invariants(seed, w):
+    """Property: COUNT == #valid packets; SUM(size) == sum over valid."""
+    rng = np.random.default_rng(seed)
+    pk = random_packets(rng, 4, w)
+    count = F.compute_feature(pk, F.REGISTRY[F.NAME_TO_FID["pkt_count"]])
+    total = F.compute_feature(pk, F.REGISTRY[F.NAME_TO_FID["byte_sum"]])
+    valid = pk[..., F.PKT_VALID] > 0
+    np.testing.assert_array_equal(count, valid.sum(-1))
+    np.testing.assert_allclose(
+        total, (pk[..., F.PKT_SIZE] * valid).sum(-1), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_min_max_bounds(seed):
+    rng = np.random.default_rng(seed)
+    pk = random_packets(rng, 8, 16)
+    mx = F.compute_feature(pk, F.REGISTRY[F.NAME_TO_FID["pkt_size_max"]])
+    mn = F.compute_feature(pk, F.REGISTRY[F.NAME_TO_FID["pkt_size_min"]])
+    assert (mx >= mn - 1e-6).all()
+    assert (mx <= 1500).all() and (mn >= 40).all()

@@ -1,0 +1,139 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.kernels import ops
+from repro.kernels.ref import (
+    chunk_scan_chunked_ref, chunk_scan_ref, dt_traverse_ref,
+    feature_window_ref,
+)
+from tests.test_features import random_packets
+
+
+# ---------------------------------------------------------------------------
+# feature_window
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,w,k", [(8, 4, 1), (64, 16, 4), (130, 33, 6),
+                                   (256, 8, 8)])
+def test_feature_window_pallas_vs_ref(b, w, k):
+    rng = np.random.default_rng(b * 1000 + w)
+    pk = jnp.asarray(random_packets(rng, b, w))
+    op = jnp.asarray(rng.integers(0, F.N_OPS, (b, k)), jnp.int32)
+    field = jnp.asarray(rng.integers(0, F.PKT_NFIELDS, (b, k)), jnp.int32)
+    pred = jnp.asarray(rng.integers(0, F.N_PREDS, (b, k)), jnp.int32)
+    init = jnp.where(op == F.OP_MIN, jnp.float32(np.finfo(np.float32).max), 0.0)
+    ref = feature_window_ref(pk, op, field, pred, init)
+    from repro.kernels.feature_window import feature_window_pallas
+    out = feature_window_pallas(pk, op, field, pred, init, interpret=True,
+                                block_b=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dt_traverse
+# ---------------------------------------------------------------------------
+def _random_range_tables(rng, S, k, T, L):
+    thr = np.sort(rng.normal(size=(S, k, T)).astype(np.float32), axis=2)
+    # random valid mark intervals
+    lo = rng.integers(0, T, (S, L, k)).astype(np.int32)
+    hi = lo + rng.integers(0, T, (S, L, k)).astype(np.int32)
+    act = rng.integers(0, S + 5, (S, L)).astype(np.int32)
+    valid = (rng.random((S, L)) < 0.8).astype(np.int32)
+    valid[:, 0] = 1
+    # make leaf 0 a catch-all so every flow matches something
+    lo[:, 0, :] = 0
+    hi[:, 0, :] = T + 1
+    return thr, lo, hi, act, valid
+
+
+@pytest.mark.parametrize("S,k,T,L,B", [(3, 2, 8, 8, 50), (16, 6, 16, 32, 300),
+                                       (7, 4, 8, 16, 128)])
+def test_dt_traverse_grouped_pallas_vs_ref(S, k, T, L, B):
+    rng = np.random.default_rng(S * 100 + B)
+    thr, lo, hi, act, valid = _random_range_tables(rng, S, k, T, L)
+    regs = jnp.asarray(rng.normal(size=(B, k)).astype(np.float32))
+    sid = jnp.asarray(rng.integers(0, S, B), jnp.int32)
+    ref = dt_traverse_ref(regs, jnp.asarray(thr)[sid], jnp.asarray(lo)[sid],
+                          jnp.asarray(hi)[sid], jnp.asarray(act)[sid],
+                          jnp.asarray(valid)[sid] > 0)
+
+    from repro.core.range_tables import RangeExecTables
+    ret = RangeExecTables(thr, lo, hi, act, valid.astype(bool),
+                          n_subtrees=S, n_classes=5)
+    out = ops.dt_traverse(regs, sid, ret, impl="pallas", block_b=64)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# chunk_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dk,dv", [(16, 16), (64, 32), (64, 64)])
+@pytest.mark.parametrize("T,chunk", [(32, 16), (128, 64), (256, 128)])
+@pytest.mark.parametrize("bonus", [False, True])
+def test_chunk_scan_pallas_vs_naive(dk, dv, T, chunk, bonus):
+    rng = np.random.default_rng(dk + T + bonus)
+    B = 2
+    q = jnp.asarray(rng.normal(size=(B, T, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, dv)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 0.999, (B, T, dk)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(B, dk)), jnp.float32) if bonus else None
+    s0 = jnp.asarray(rng.normal(size=(B, dk, dv)), jnp.float32)
+    o_ref, s_ref = chunk_scan_ref(q, k, v, w, u, s0)
+    o, s = ops.chunk_scan(q, k, v, w, u, s0, chunk=chunk, impl="pallas")
+    scale = float(jnp.abs(o_ref).max())
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-4 * max(scale, 1.0))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_scan_dtypes(dtype):
+    rng = np.random.default_rng(9)
+    B, T, d = 2, 64, 32
+    q = jnp.asarray(rng.normal(size=(B, T, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, T, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, T, d)), dtype)
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (B, T, d)), jnp.float32)
+    o_ref, _ = chunk_scan_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), w)
+    o, _ = ops.chunk_scan(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, chunk=32, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), atol=5e-3)
+
+
+def test_chunk_scan_state_continuity():
+    """Running two halves with carried state == one full pass — the
+    SpliDT window-reuse property on the LM side."""
+    rng = np.random.default_rng(11)
+    B, T, d = 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.7, 0.999, (B, T, d)), jnp.float32)
+    o_full, s_full = ops.chunk_scan(q, k, v, w, chunk=32, impl="ref")
+    h = T // 2
+    o1, s1 = ops.chunk_scan(q[:, :h], k[:, :h], v[:, :h], w[:, :h],
+                            chunk=32, impl="ref")
+    o2, s2 = ops.chunk_scan(q[:, h:], k[:, h:], v[:, h:], w[:, h:],
+                            state=s1, chunk=32, impl="ref")
+    np.testing.assert_allclose(np.asarray(o_full[:, h:]), np.asarray(o2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_ref_equals_naive_long():
+    rng = np.random.default_rng(13)
+    B, T, d = 1, 512, 16
+    q = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.9, 0.9999, (B, T, d)), jnp.float32)
+    o1, s1 = chunk_scan_ref(q, k, v, w)
+    o2, s2 = chunk_scan_chunked_ref(q, k, v, w, chunk=128)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-3)

@@ -1,0 +1,52 @@
+"""Flow-state store: CRC indexing, collisions, eviction, TTD."""
+import numpy as np
+
+from repro.core.mat import (
+    FlowStore, collision_curve, crc32_hash, random_five_tuples,
+)
+from repro.core.recirc import time_to_detection
+from repro.flows.windows import window_bounds
+
+
+def test_crc_deterministic_and_spread():
+    rng = np.random.default_rng(0)
+    ft = random_five_tuples(2000, rng)
+    h1, h2 = crc32_hash(ft), crc32_hash(ft)
+    np.testing.assert_array_equal(h1, h2)
+    # reasonable spread over 256 buckets
+    counts = np.bincount(h1 % 256, minlength=256)
+    assert counts.max() < 30
+
+
+def test_store_admit_evict_cycle():
+    rng = np.random.default_rng(1)
+    store = FlowStore(capacity=4096, k=4)
+    ft = random_five_tuples(1000, rng)
+    slots = store.admit(np.arange(1000), crc32_hash(ft))
+    live = (slots >= 0).sum()
+    assert live + store.collisions == 1000
+    store.evict(slots)
+    assert store.stats().n_flows == 0
+    # slots are reusable after eviction (register reuse)
+    slots2 = store.admit(np.arange(1000, 2000), crc32_hash(ft))
+    assert (slots2 >= 0).sum() == live
+
+
+def test_collision_curve_monotone():
+    curve = collision_curve(1 << 14, [0.05, 0.3, 0.7])
+    rates = [r for _, r in curve]
+    assert rates == sorted(rates)
+    assert rates[0] < 0.05
+
+
+def test_ttd_early_exit_faster(small_flow_ds):
+    p = 3
+    n = small_flow_ds.n_flows
+    early = np.zeros(n, dtype=np.int64)           # exits partition 0
+    late = np.full(n, p - 1, dtype=np.int64)      # one-shot: full flow
+    ttd_e = time_to_detection(small_flow_ds.packets, small_flow_ds.lengths,
+                              early, p)
+    ttd_l = time_to_detection(small_flow_ds.packets, small_flow_ds.lengths,
+                              late, p)
+    assert (ttd_e <= ttd_l + 1e-9).all()
+    assert ttd_e.mean() < ttd_l.mean()

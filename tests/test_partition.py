@@ -1,0 +1,69 @@
+"""Algorithm-1 partitioned training: structural invariants + routing."""
+import numpy as np
+
+from repro.core.partition import EXIT, train_partitioned_dt
+from repro.core.tree import macro_f1
+from repro.flows.windows import window_features
+
+
+def test_subtree_feature_budget(trained_pdt):
+    pdt, _, _ = trained_pdt
+    for st in pdt.subtrees:
+        assert len(st.used_features) <= pdt.k, st.sid
+
+
+def test_routing_targets_next_partition(trained_pdt):
+    pdt, _, _ = trained_pdt
+    for st in pdt.subtrees:
+        for leaf, nxt in st.leaf_next_sid.items():
+            if nxt == EXIT:
+                continue
+            assert pdt.subtrees[nxt].partition == st.partition + 1
+
+
+def test_last_partition_always_exits(trained_pdt):
+    pdt, _, _ = trained_pdt
+    last = pdt.n_partitions - 1
+    for st in pdt.subtrees:
+        if st.partition == last:
+            assert all(v == EXIT for v in st.leaf_next_sid.values())
+
+
+def test_subtree_depths_within_partition_sizes(trained_pdt):
+    pdt, _, _ = trained_pdt
+    for st in pdt.subtrees:
+        assert st.depth <= pdt.partition_sizes[st.partition]
+
+
+def test_predict_beats_chance(trained_pdt, small_flow_ds):
+    pdt, _, _ = trained_pdt
+    _, te = small_flow_ds.split()
+    Xw = window_features(te, 3)
+    pred = pdt.predict(Xw)
+    f1 = macro_f1(te.labels, pred, small_flow_ds.n_classes)
+    assert f1 > 0.5   # 4-class problem; chance ~0.25
+
+
+def test_recirc_bounded_by_partitions(trained_pdt):
+    pdt, Xw, tr = trained_pdt
+    _, recircs, exit_p = pdt.predict(Xw, return_trace=True)
+    assert (recircs <= pdt.n_partitions - 1).all()
+    assert (recircs == exit_p).all()   # one control pkt per transition
+
+
+def test_feature_density_sparse(trained_pdt):
+    """Paper Table 1: per-subtree feature density ~6-10%, not ~100%."""
+    pdt, _, _ = trained_pdt
+    _, per_sub = pdt.feature_density()
+    assert per_sub < 25.0
+    assert len(pdt.unique_features()) > pdt.k   # more total than k
+
+
+def test_single_partition_degenerates_to_plain_tree(small_flow_ds):
+    tr, te = small_flow_ds.split()
+    Xw = window_features(tr, 1)
+    pdt = train_partitioned_dt(Xw, tr.labels, partition_sizes=[6], k=4)
+    assert pdt.n_partitions == 1
+    assert len(pdt.subtrees) == 1
+    _, recircs, _ = pdt.predict(Xw, return_trace=True)
+    assert (recircs == 0).all()      # Table 5's 0.0 +- 0.0 rows

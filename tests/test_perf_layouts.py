@@ -1,0 +1,129 @@
+"""§Perf layout regression tests (mini 8-device meshes).
+
+Locks in the three hillclimb results structurally: the opt layouts must
+lower+compile and produce strictly fewer collective bytes than the
+baseline layouts on the same miniature cell.
+"""
+import numpy as np
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+def test_blockwise_attention_equals_naive():
+    import jax, jax.numpy as jnp
+    from repro.models import layers as L
+    rng = np.random.default_rng(0)
+    B, Tq, Tk, Hq, Hkv, Dh = 2, 8, 48, 8, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, Tq, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Tk, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Tk, Hkv, Dh)), jnp.float32)
+    for kw in (dict(causal=True, q_offset=40),
+               dict(causal=True, q_offset=16, window=8),
+               dict(causal=True, q_offset=0, prefix_len=4, kv_len=30),
+               dict(causal=False, q_offset=0)):
+        naive = L.attend(q, k, v, **kw)
+        bw = L._attend_blockwise(
+            q, k, v, scale=Dh ** -0.5, block=16,
+            causal=kw.get("causal", True), q_offset=kw.get("q_offset", 0),
+            kv_len=kw.get("kv_len"), prefix_len=kw.get("prefix_len", 0),
+            window=kw.get("window", 0))
+        np.testing.assert_allclose(np.asarray(naive, np.float32),
+                                   np.asarray(bw, np.float32), atol=2e-5)
+    # gradients agree too (train path)
+    import jax
+    f = lambda fn: (lambda q: jnp.sum(fn(q) ** 2))
+    g1 = jax.grad(f(lambda q: L.attend(q, k, v, causal=True, q_offset=40)))(q)
+    g2 = jax.grad(f(lambda q: L._attend_blockwise(
+        q, k, v, scale=Dh ** -0.5, block=16, causal=True, q_offset=40,
+        kv_len=None, prefix_len=0, window=0)))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-5)
+
+
+def test_moe_einsum_decode_equals_scatter_path():
+    """The §Perf einsum dispatch must match the scatter dispatch when
+    neither drops tokens."""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.distributed import pspec
+    from repro.models import moe as moe_lib
+    cfg = get_arch("qwen2-moe-a2.7b").reduced()
+    defs = moe_lib.moe_defs(cfg.d_model, cfg.moe)
+    params = pspec.init_params(defs, jax.random.key(0))
+    x = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, 4, cfg.d_model)), jnp.float32)
+    E = params["router"].shape[1]
+    out_e, _ = moe_lib._moe_decode_einsum(params, x, cfg.moe, E)
+    out_s, _ = moe_lib.moe_ffn(params, x, cfg.moe, dropless=True)
+    # dropless scatter path routes identically at this size... but the
+    # wrapper itself routes to einsum; call the scatter body via a large
+    # token threshold
+    old = moe_lib._DECODE_EINSUM_MAX_TOKENS
+    try:
+        moe_lib._DECODE_EINSUM_MAX_TOKENS = 0
+        out_s, _ = moe_lib.moe_ffn(params, x, cfg.moe, dropless=True)
+    finally:
+        moe_lib._DECODE_EINSUM_MAX_TOKENS = old
+    scale = float(jnp.abs(out_s).max())
+    np.testing.assert_allclose(np.asarray(out_e, np.float32),
+                               np.asarray(out_s, np.float32),
+                               atol=0.02 * scale)
+
+
+def test_opt_layouts_reduce_collectives():
+    code = """
+import dataclasses, jax, re
+from jax.sharding import AxisType
+import repro.launch.dryrun as dr
+from repro.configs import get_arch
+from repro.configs.base import ShapeCfg
+from repro.analysis.roofline import parse_collectives
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+
+# dense train: FSDP-2D must beat TP+FSDP on collective bytes
+cfg = get_arch("granite-3-2b").reduced()
+shape = ShapeCfg("t", 256, 8, "train")
+res = {}
+for layout in ("base", "opt"):
+    compiled, *_ = dr.lower_compile(cfg, shape, mesh, unroll=False,
+                                    layout=layout)
+    res[layout] = parse_collectives(compiled.as_text()).total_bytes
+assert res["opt"] < res["base"], res
+print("train ok", res)
+
+# moe decode: einsum dispatch must beat scatter dispatch
+cfg = get_arch("qwen2-moe-a2.7b").reduced()
+shape = ShapeCfg("d", 1024, 8, "decode")
+res = {}
+for layout in ("base", "opt"):
+    compiled, *_ = dr.lower_compile(cfg, shape, mesh, unroll=False,
+                                    layout=layout)
+    res[layout] = parse_collectives(compiled.as_text()).total_bytes
+assert res["opt"] < res["base"], res
+print("decode ok", res)
+"""
+    out = run_subprocess(code, devices=8, timeout=900)
+    assert "decode ok" in out
+
+
+def test_windowed_decode_slice_correct():
+    """Sliding-window decode with a window-sized cache slice must equal
+    window-masked attention over the full cache (the §Perf long_500k
+    change) — tested directly at the attend() level."""
+    import jax.numpy as jnp
+    from repro.models import layers as L
+    rng = np.random.default_rng(2)
+    B, S, H, Dh, W = 2, 96, 4, 16, 16
+    cur = 70                                  # tokens already cached
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(B, S, H, Dh)), jnp.float32)
+    full = L.attend(q, ck, cv, causal=True, q_offset=cur,
+                    kv_len=cur + 1, window=W)
+    start = cur + 1 - W
+    sliced = L.attend(q, ck[:, start:start + W], cv[:, start:start + W],
+                      causal=True, q_offset=cur - start,
+                      kv_len=cur + 1 - start, window=W)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(sliced, np.float32), atol=1e-5)

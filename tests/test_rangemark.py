@@ -1,0 +1,71 @@
+"""Range marking: prefix covers + rule-table semantics == tree traversal."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rangemark import (
+    build_subtree_rules, prefix_cover_count, quantize_thresholds,
+)
+from repro.core.tree import train_tree
+
+
+def _brute_prefix_count(lo, hi, width):
+    """Greedy minimal prefix cover (reference implementation)."""
+    count = 0
+    while lo <= hi:
+        size = 1
+        while (lo % (size * 2) == 0) and (lo + size * 2 - 1 <= hi):
+            size *= 2
+        count += 1
+        lo += size
+    return count
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_prefix_cover_matches_reference(a, b):
+    lo, hi = min(a, b), max(a, b)
+    assert prefix_cover_count(lo, hi, 8) == _brute_prefix_count(lo, hi, 8)
+
+
+def test_prefix_cover_bounds():
+    w = 16
+    for lo, hi in [(0, 2**w - 1), (1, 2**w - 2), (5, 5), (0, 0)]:
+        c = prefix_cover_count(lo, hi, w)
+        assert 1 <= c <= 2 * w - 2 or (lo, hi) == (0, 2**w - 1)
+
+
+def test_quantize_thresholds_monotone():
+    thr = np.array([0.5, 1.5, 7.2])
+    q = quantize_thresholds(thr, 0.0, 10.0, 8)
+    assert (np.diff(q) >= 0).all()
+    assert q.min() >= 0 and q.max() <= 255
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+def test_rules_equal_tree_traversal(seed, depth):
+    """The paper's guarantee: range-marked TCAM rules implement exactly
+    the same function as the decision tree (one rule per leaf)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(300, 6)).astype(np.float32)
+    y = rng.integers(0, 3, 300)
+    t = train_tree(X, y, max_depth=depth, k_features=4)
+    leaf_action = {int(i): 100 + int(i)
+                   for i in np.nonzero(t.feature < 0)[0]}
+    rules = build_subtree_rules(t, leaf_action)
+    assert rules.model_entries == t.n_leaves        # one rule per leaf
+    got = rules.apply(X)
+    expect = np.asarray([leaf_action[int(l)] for l in t.apply(X)])
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_key_bits_grow_with_features():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(400, 8)).astype(np.float32)
+    y = ((X[:, 0] > 0).astype(int) + 2 * (X[:, 1] > 0)).astype(np.int64)
+    t1 = train_tree(X, y, max_depth=2, k_features=1)
+    t3 = train_tree(X, y, max_depth=6, k_features=3)
+    r1 = build_subtree_rules(t1, {int(i): 0 for i in np.nonzero(t1.feature < 0)[0]})
+    r3 = build_subtree_rules(t3, {int(i): 0 for i in np.nonzero(t3.feature < 0)[0]})
+    assert r3.key_bits >= r1.key_bits

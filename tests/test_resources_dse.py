@@ -1,0 +1,87 @@
+"""Resource model anchors, recirculation model, BO design search."""
+import numpy as np
+import pytest
+
+from repro.core.dse import (
+    Config, GP, SearchSpace, bayes_search, expected_improvement,
+    make_splidt_evaluator,
+)
+from repro.core.recirc import HADOOP, WEBSERVER, recirc_bandwidth
+from repro.core.resources import TOFINO1, estimate, estimate_oneshot
+from repro.flows.windows import window_features
+
+
+def test_oneshot_anchor_points():
+    """Paper footnote 1: k=4 ~ 100K flows, k=6 fewer, on Tofino1."""
+    r4 = estimate_oneshot(4, 5000, 40, depth=13)
+    r6 = estimate_oneshot(6, 5000, 56, depth=13)
+    assert 60_000 <= r6.flow_capacity < r4.flow_capacity <= 400_000
+
+
+def test_splidt_constant_stage_cost(trained_pdt):
+    """SpliDT's stage cost must NOT grow with total depth (time-sharing)."""
+    pdt, _, _ = trained_pdt
+    rep = estimate(pdt)
+    assert rep.stages_logic <= TOFINO1.logic_stages + 3
+    assert rep.feasible or rep.reasons
+
+
+def test_feasibility_monotone_in_flows(trained_pdt):
+    pdt, _, _ = trained_pdt
+    caps = [estimate(pdt, flows=f).feasible
+            for f in (1_000, 100_000, 10_000_000)]
+    # once infeasible, stays infeasible as flows grow
+    assert caps == sorted(caps, reverse=True)
+
+
+def test_precision_increases_capacity(trained_pdt):
+    """Paper Fig. 12: 16/8-bit registers support 2x/4x the flows."""
+    pdt, _, _ = trained_pdt
+    c32 = estimate(pdt, bits=32).flow_capacity
+    c16 = estimate(pdt, bits=16).flow_capacity
+    c8 = estimate(pdt, bits=8).flow_capacity
+    assert c32 < c16 < c8
+    assert c16 / c32 > 1.5 and c8 / c32 > 2.5
+
+
+def test_recirc_bandwidth_scales(trained_pdt):
+    pdt, Xw, tr = trained_pdt
+    _, recircs, _ = pdt.predict(Xw, return_trace=True)
+    ws = recirc_bandwidth(recircs, 1_000_000, WEBSERVER)
+    hd = recirc_bandwidth(recircs, 1_000_000, HADOOP)
+    assert hd.mean_mbps == pytest.approx(2 * ws.mean_mbps, rel=0.01)
+    assert ws.fraction_of_budget < 0.001      # paper: <0.05% worst case
+    half = recirc_bandwidth(recircs, 500_000, WEBSERVER)
+    assert half.mean_mbps == pytest.approx(ws.mean_mbps / 2, rel=0.01)
+
+
+def test_gp_and_ei():
+    rng = np.random.default_rng(0)
+    X = rng.random((20, 3))
+    y = np.sin(X.sum(1) * 3)
+    gp = GP().fit(X, y)
+    mu, sd = gp.predict(X)
+    np.testing.assert_allclose(mu, y, atol=0.15)   # interpolates
+    assert (sd >= 0).all()
+    ei = expected_improvement(np.array([1.0, 0.0]), np.array([0.1, 0.1]), 0.5)
+    assert ei[0] > ei[1]
+
+
+def test_bayes_search_finds_feasible(small_flow_ds):
+    tr, te = small_flow_ds.split()
+    P = 4
+    Xw_tr = window_features(tr, P)
+    Xw_te = window_features(te, P)
+    ev = make_splidt_evaluator(Xw_tr, tr.labels, Xw_te, te.labels,
+                               n_classes=small_flow_ds.n_classes,
+                               flows=100_000)
+    space = SearchSpace(max_partitions=4, k_max=5, depth_max=6)
+    res = bayes_search(ev, space, n_iterations=3, batch=2, n_init=4, seed=1)
+    assert res.best is not None
+    assert res.best.feasible and res.best.f1 > 0.4
+    pareto = res.pareto()
+    assert pareto
+    # pareto set is non-dominated
+    for a in pareto:
+        for b in pareto:
+            assert not (b.f1 > a.f1 and b.flow_capacity > a.flow_capacity)

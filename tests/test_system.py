@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the paper's system: the full SpliDT
+pipeline (synthetic flows -> windowed features -> Algorithm-1 training
+-> rule generation -> data-plane engine -> resource & recirc models)
+reproducing the paper's headline claims in structure."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import best_oneshot_for_flows
+from repro.core.inference import Engine
+from repro.core.partition import train_partitioned_dt
+from repro.core.recirc import HADOOP, WEBSERVER, recirc_bandwidth
+from repro.core.resources import estimate
+from repro.core.tree import macro_f1
+from repro.flows.synthetic import make_dataset
+from repro.flows.windows import (
+    full_flow_features, quantize_features, window_features, window_packets,
+)
+
+
+@pytest.fixture(scope="module")
+def d1():
+    ds = make_dataset("d1", n_flows=2500)
+    tr, te = ds.split()
+    return ds, tr, te
+
+
+def test_splidt_beats_topk_baseline(d1):
+    """Figure 2 / Table 3 in structure: partitioned DT with per-subtree
+    feature sets beats the one-shot top-k model and approaches the
+    unconstrained-tree ideal."""
+    ds, tr, te = d1
+    Xw_tr, Xw_te = window_features(tr, 2), window_features(te, 2)
+    pdt = train_partitioned_dt(Xw_tr, tr.labels, partition_sizes=[6, 6], k=6)
+    f1_splidt = macro_f1(te.labels, pdt.predict(Xw_te), ds.n_classes)
+
+    Xf_tr, Xf_te = full_flow_features(tr), full_flow_features(te)
+    _, f1_topk = best_oneshot_for_flows(
+        Xf_tr, tr.labels, Xf_te, te.labels, flows=100_000, style="nb",
+        n_classes=ds.n_classes, k_grid=(6,), depth_grid=(13,))
+    assert f1_splidt > f1_topk, (f1_splidt, f1_topk)
+
+
+def test_5x_feature_scaling_at_same_registers(d1):
+    """Headline claim: ~5x more stateful features than top-k at the same
+    k register slots."""
+    ds, tr, te = d1
+    Xw_tr = window_features(tr, 3)
+    pdt = train_partitioned_dt(Xw_tr, tr.labels,
+                               partition_sizes=[5, 5, 5], k=6)
+    total = len(pdt.unique_features())
+    assert total >= 5 * 6 * 0.8          # >= ~5x k (some slack)
+    assert pdt.max_features_per_subtree() <= 6
+
+
+def test_full_stack_engine_pipeline(d1):
+    ds, tr, te = d1
+    p = 3
+    Xw_tr = window_features(tr, p)
+    pdt = train_partitioned_dt(Xw_tr, tr.labels, partition_sizes=[3, 3, 3],
+                               k=4)
+    wp = window_packets(te, p)
+    res = Engine.from_model(pdt, impl="ref").run(wp)
+    f1 = macro_f1(te.labels, res.labels, ds.n_classes)
+    assert f1 > 0.4
+    # recirculation priced against both datacenter environments
+    for env in (WEBSERVER, HADOOP):
+        bw = recirc_bandwidth(res.recircs, 1_000_000, env)
+        assert bw.fraction_of_budget < 5e-4      # paper: <0.05%
+    rep = estimate(pdt, flows=100_000)
+    assert rep.feasible, rep.reasons
+
+
+def test_bit_precision_tradeoff(d1):
+    """Fig 12: lower precision -> more flows, modest accuracy drop."""
+    ds, tr, te = d1
+    Xw_tr, Xw_te = window_features(tr, 2), window_features(te, 2)
+    pdt32 = train_partitioned_dt(Xw_tr, tr.labels, partition_sizes=[5, 5], k=4)
+    f32 = macro_f1(te.labels, pdt32.predict(Xw_te), ds.n_classes)
+    q_tr, q_te = quantize_features(Xw_tr, 8), quantize_features(Xw_te, 8)
+    pdt8 = train_partitioned_dt(q_tr, tr.labels, partition_sizes=[5, 5], k=4)
+    f8 = macro_f1(te.labels, pdt8.predict(q_te), ds.n_classes)
+    assert f8 > 0.5 * f32                 # modest drop, not collapse
+    c32 = estimate(pdt32, bits=32).flow_capacity
+    c8 = estimate(pdt8, bits=8).flow_capacity
+    assert c8 > 2 * c32
+
+
+def test_register_footprint_constant_in_features(d1):
+    """Fig 11: register bits depend on k only, not total features."""
+    ds, tr, _ = d1
+    Xw = window_features(tr, 3)
+    reg_bits = []
+    totals = []
+    for ps in ([2, 2, 2], [5, 5, 5]):
+        pdt = train_partitioned_dt(Xw, tr.labels, partition_sizes=ps, k=4)
+        reg_bits.append(estimate(pdt).register_bits_per_flow)
+        totals.append(len(pdt.unique_features()))
+    assert totals[1] > totals[0]          # deeper -> more unique features
+    assert abs(reg_bits[1] - reg_bits[0]) <= 32   # ~constant registers

@@ -1,0 +1,78 @@
+"""CART trainer: correctness + the SpliDT k-feature budget."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import feature_importance, macro_f1, train_tree
+
+
+def test_perfect_split():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 5)).astype(np.float32)
+    y = (X[:, 2] > 0.1).astype(np.int64)
+    t = train_tree(X, y, max_depth=3)
+    assert (t.predict(X) == y).mean() > 0.97
+    assert 2 in t.used_features()
+
+
+def test_k_feature_budget_enforced():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(600, 20)).astype(np.float32)
+    y = ((X[:, 0] > 0) ^ (X[:, 5] > 0) ^ (X[:, 9] > 0)).astype(np.int64)
+    for k in (1, 2, 3):
+        t = train_tree(X, y, max_depth=8, k_features=k)
+        assert len(t.used_features()) <= k
+
+
+def test_allowed_features_respected():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(300, 10)).astype(np.float32)
+    y = (X[:, 3] > 0).astype(np.int64)
+    t = train_tree(X, y, max_depth=4, allowed_features=np.array([1, 2]))
+    assert set(t.used_features()) <= {1, 2}
+
+
+def test_depth_limit():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(500, 8)).astype(np.float32)
+    y = rng.integers(0, 4, 500)
+    for d in (1, 2, 5):
+        t = train_tree(X, y, max_depth=d, min_gain=-1.0)
+        assert t.max_depth <= d
+
+
+def test_determinism():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(300, 6)).astype(np.float32)
+    y = rng.integers(0, 3, 300)
+    t1 = train_tree(X, y, max_depth=5)
+    t2 = train_tree(X, y, max_depth=5)
+    np.testing.assert_array_equal(t1.feature, t2.feature)
+    np.testing.assert_array_equal(t1.threshold, t2.threshold)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_apply_consistent_with_predict_proba(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(200, 5)).astype(np.float32)
+    y = rng.integers(0, 3, 200)
+    t = train_tree(X, y, max_depth=4)
+    leaves = t.apply(X)
+    assert (t.feature[leaves] == -1).all()          # always lands on a leaf
+    p = t.predict_proba(X)
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-5)
+
+
+def test_macro_f1_basics():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    assert macro_f1(y, y, 3) == 1.0
+    assert macro_f1(y, 1 - y % 2, 3) < 0.7
+
+
+def test_feature_importance_finds_signal():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(800, 12)).astype(np.float32)
+    y = ((X[:, 7] > 0).astype(int) + (X[:, 2] > 0.5)).astype(np.int64)
+    imp = feature_importance(X, y, n_classes=3)
+    assert set(np.argsort(imp)[::-1][:2]) == {7, 2}
