@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import Row, dataset, windowed
 from repro.core.dse import SearchSpace, bayes_search, make_splidt_evaluator

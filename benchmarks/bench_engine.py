@@ -1,0 +1,61 @@
+"""Engine throughput: looped (per-partition host sync) vs fused
+(single jitted lax.scan) vs streaming (fused over fixed micro-batches).
+
+The fused path is the tentpole claim: at production flow counts the
+partition walk must stay on device, so flows/sec should be bounded by
+the kernel math, not by host round-trips.  The streaming row shows the
+same math scaling past one device batch (memory high-water = one
+micro-batch)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, splidt_model, timed
+from repro.core.inference import Engine
+from repro.flows.windows import window_packets
+from repro.serve.streaming import run_streaming
+
+
+def _tiled_windows(te, p: int, n_flows: int) -> np.ndarray:
+    """Tile the test split's window tensor up to ``n_flows`` flows."""
+    wp = window_packets(te, p)
+    reps = -(-n_flows // wp.shape[0])
+    return np.tile(wp, (reps, 1, 1, 1))[:n_flows]
+
+
+def run(quick: bool = True, smoke: bool = False):
+    rows = []
+    name, p, k = "d2", 3, 4
+    # smoke: small dataset; otherwise the DEFAULT n_flows so the
+    # lru_cache hit is shared with the other bench modules
+    if smoke:
+        _, _, te = dataset(name, n_flows=400)
+        pdt = splidt_model(name, (3,) * p, k, n_flows=400)
+    else:
+        _, _, te = dataset(name)
+        pdt = splidt_model(name, (3,) * p, k)
+    eng = Engine.from_model(pdt, impl="ref")
+
+    B = 256 if smoke else (10_000 if quick else 100_000)
+    wp = _tiled_windows(te, p, B)
+    repeat = 1 if smoke else 3
+
+    def flows_per_s(us: float) -> str:
+        return f"flows_per_s={B / (us / 1e6):.0f};B={B}"
+
+    _, us_loop = timed(lambda: eng.run_looped(wp, with_trace=False),
+                       repeat=repeat)
+    rows.append(Row("engine/looped", us_loop, flows_per_s(us_loop)))
+
+    _, us_fused = timed(lambda: eng.run(wp, with_trace=False), repeat=repeat)
+    rows.append(Row("engine/fused", us_fused, flows_per_s(us_fused)))
+
+    mb = 128 if smoke else 4096
+    _, us_stream = timed(
+        lambda: run_streaming(eng, wp, micro_batch=mb), repeat=repeat)
+    rows.append(Row("engine/streaming", us_stream,
+                    flows_per_s(us_stream) + f";micro_batch={mb}"))
+
+    rows.append(Row("engine/fused_speedup", us_fused,
+                    f"speedup_vs_looped={us_loop / us_fused:.2f}x"))
+    return rows

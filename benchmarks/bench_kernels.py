@@ -1,44 +1,46 @@
 """Kernel microbenchmarks: wall-time of the jnp reference path on CPU
-(the Pallas kernels target TPU; interpret-mode timing is not meaningful)
-plus the data-plane engine's end-to-end flow throughput."""
+(the Pallas kernels target TPU; interpret-mode timing is not meaningful).
+End-to-end engine throughput lives in ``bench_engine``; the pallas
+interpret row stays here as a correctness-path smoke signal."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Row, dataset, splidt_model, timed, windowed
+from benchmarks.common import Row, dataset, splidt_model, timed
 from repro.core.inference import Engine
 from repro.flows.windows import window_packets
 from repro.kernels import ops
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
 
     # chunk_scan (the LM-side kernel): tokens/sec on CPU ref path
-    B, T, d = 4, 512, 64
+    B, T, d = (2, 128, 32) if smoke else (4, 512, 64)
     q = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, T, d)), jnp.float32)
     w = jnp.asarray(rng.uniform(0.9, 0.999, (B, T, d)), jnp.float32)
     fn = lambda: jax.block_until_ready(
         ops.chunk_scan(q, k, v, w, chunk=128, impl="ref")[0])
-    _, us = timed(fn, repeat=5)
+    _, us = timed(fn, repeat=1 if smoke else 5)
     rows.append(Row("kernel/chunk_scan_ref", us,
                     f"tokens_per_s={B * T / (us / 1e6):.0f}"))
 
-    # feature_window + dt_traverse through the engine
+    # the engine's pallas dispatch path (interpret mode off-TPU);
+    # non-smoke uses the default n_flows to share the lru_cache entry
+    # with the other bench modules
     name = "d2"
-    ds, tr, te = dataset(name)
-    pdt = splidt_model(name, (3, 3, 3), 4)
+    if smoke:
+        _, _, te = dataset(name, n_flows=400)
+        pdt = splidt_model(name, (3, 3, 3), 4, n_flows=400)
+    else:
+        _, _, te = dataset(name)
+        pdt = splidt_model(name, (3, 3, 3), 4)
     wp = window_packets(te, 3)
-    eng = Engine.from_model(pdt, impl="ref")
-    _, us = timed(lambda: eng.run(wp), repeat=2)
-    rows.append(Row("engine/ref_full_inference", us,
-                    f"flows_per_s={te.n_flows / (us / 1e6):.0f};"
-                    f"n_flows={te.n_flows}"))
     eng_p = Engine.from_model(pdt, impl="pallas")
     _, us_p = timed(lambda: eng_p.run(wp), repeat=1)
     rows.append(Row("engine/pallas_interpret_inference", us_p,

@@ -2,7 +2,6 @@
 one-shot top-k baselines (NetBeacon-/Leo-style) on d1-d3 analogues."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, dataset, splidt_model, timed, windowed
 from repro.core.baselines import best_oneshot_for_flows

@@ -2,7 +2,6 @@
 (bit-precision sweep), Table 1 (feature density)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, dataset, splidt_model, windowed
 from repro.core.resources import estimate

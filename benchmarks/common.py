@@ -6,7 +6,6 @@ import functools
 import time
 from typing import Any, Callable
 
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -1,0 +1,109 @@
+"""Forward-compat aliases for newer JAX APIs on pinned 0.4.x wheels.
+
+The codebase targets the current JAX mesh/pallas surface
+(``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``,
+``pallas.tpu.CompilerParams``).  The hermetic toolchain pins
+jax 0.4.37, where those spell differently or don't exist yet.  This
+module adds ONLY missing attributes — on a current jax every branch is
+a no-op — so the same source runs on both.  It is imported for its
+side effects from ``repro/__init__.py``.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    orig = getattr(jax, "make_mesh", None)
+    if orig is None:
+        def orig(axis_shapes, axis_names, *, devices=None):
+            import numpy as _np
+            devs = devices if devices is not None else jax.devices()
+            n = int(_np.prod(axis_shapes))
+            return jax.sharding.Mesh(
+                _np.asarray(devs[:n]).reshape(axis_shapes), axis_names)
+    elif "axis_types" in inspect.signature(orig).parameters:
+        return
+
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        # 0.4.x meshes have no axis types; Auto is the only behaviour
+        return orig(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+    # Mesh is itself a context manager that installs the legacy global
+    # mesh, which is exactly what 0.4.x sharding constraints consume.
+    jax.set_mesh = lambda mesh: mesh
+
+
+def _install_get_abstract_mesh() -> None:
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return
+    from jax._src import mesh as _mesh_lib
+
+    def get_abstract_mesh():
+        # the legacy ambient mesh: .empty/.shape match what callers use
+        return _mesh_lib.thread_resources.env.physical_mesh
+
+    jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+
+def _install_pallas_params() -> None:
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pallas not available at all: nothing to alias
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(
+            pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def _install_cost_analysis() -> None:
+    # 0.4.x returns a list of per-computation dicts; current jax returns
+    # one flat dict.  Normalise to the flat-dict contract callers use.
+    Compiled = jax.stages.Compiled
+    orig = Compiled.cost_analysis
+    if getattr(orig, "_repro_normalised", False):
+        return
+
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    cost_analysis._repro_normalised = True
+    Compiled.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_set_mesh()
+    _install_get_abstract_mesh()
+    _install_pallas_params()
+    _install_cost_analysis()
+
+
+install()

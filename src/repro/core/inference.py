@@ -8,13 +8,29 @@ Orchestrates the two data-plane phases per partition window:
 Between partitions the engine performs the "recirculation": SID update +
 register reset, counted per flow for the bandwidth model.
 
+Two execution paths:
+
+* **fused** (default) — the whole partition walk is ONE jitted
+  ``jax.lax.scan`` over partitions (:func:`fused_partition_walk`).  The
+  loop carry is ``(sid, done, labels, recircs, exit_partition)``; each
+  step runs feature_window → dt_traverse → recirculation without
+  leaving the device.  The only host↔device traffic per batch is the
+  packet windows in and one ``jax.device_get`` of the verdicts out —
+  the TPU analogue of keeping the per-packet loop inside the pipeline
+  (pForest / Taurus style).
+* **looped** — the original host-side Python loop with a per-partition
+  device→host sync.  Kept as the dispatch point for the Pallas kernels
+  (whose SID-grouping is host-side) and as the benchmark baseline.
+
 The engine must agree exactly with :meth:`PartitionedDT.predict` (the
-offline numpy oracle); a property test enforces this.
+offline numpy oracle); property tests enforce this for both paths.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -32,33 +48,150 @@ class EngineResult:
     regs_trace: list[np.ndarray] # per-partition register snapshots
 
 
+def _fused_partition_walk(
+    win_pkts: jnp.ndarray,       # (B, P, W, PKT_NFIELDS)
+    dev: ops.DeviceTables,
+    *,
+    n_subtrees: int,
+    with_trace: bool = False,
+):
+    """Device-resident partition walk: scan partitions, carry flow state.
+
+    Returns ``(labels, recircs, exit_partition, regs)`` — all int32
+    except ``regs`` (P, B, k) f32, which is ``None`` unless
+    ``with_trace``.  Actions ``>= n_subtrees`` exit with class
+    ``action - n_subtrees``; smaller actions recirculate to that SID.
+    """
+    B, P = win_pkts.shape[0], win_pkts.shape[1]
+    S = n_subtrees
+
+    def step(carry, xs):
+        sid, done, labels, recircs, exit_p = carry
+        p, pkts = xs
+        regs, action = ops.fused_step(pkts, sid, dev)
+        is_exit = action >= S
+        active = ~done
+        exiting = active & is_exit
+        labels = jnp.where(exiting, action - S, labels)
+        exit_p = jnp.where(exiting, p, exit_p)
+        done = done | exiting
+        cont = active & ~is_exit
+        # recirculation: one control packet per transition, SID register
+        # update; feature registers are rebuilt from scratch next window
+        recircs = recircs + cont.astype(jnp.int32)
+        sid = jnp.where(cont, action, sid)
+        return (sid, done, labels, recircs, exit_p), (
+            regs if with_trace else None)
+
+    init = (
+        jnp.zeros(B, jnp.int32),            # sid: all flows start at root
+        jnp.zeros(B, jnp.bool_),            # done
+        jnp.zeros(B, jnp.int32),            # labels
+        jnp.zeros(B, jnp.int32),            # recircs
+        jnp.zeros(B, jnp.int32),            # exit_partition
+    )
+    xs = (jnp.arange(P, dtype=jnp.int32), jnp.swapaxes(win_pkts, 0, 1))
+    (sid, done, labels, recircs, exit_p), regs = jax.lax.scan(step, init, xs)
+    return labels, recircs, exit_p, regs
+
+
+fused_partition_walk = functools.partial(
+    jax.jit, static_argnames=("n_subtrees", "with_trace"),
+)(_fused_partition_walk)
+
+# Donating the packet buffer lets back-to-back micro-batches reuse the
+# same device allocation (streaming path).  CPU can't donate host numpy
+# buffers usefully, so the streaming scheduler only picks this variant
+# off-CPU.
+fused_partition_walk_donated = functools.partial(
+    jax.jit, static_argnames=("n_subtrees", "with_trace"),
+    donate_argnums=(0,),
+)(_fused_partition_walk)
+
+
 @dataclasses.dataclass
 class Engine:
     tables: PackedTables
     ret: RangeExecTables
     impl: str = "auto"
+    _dev: ops.DeviceTables | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @classmethod
     def from_model(cls, pdt: PartitionedDT, impl: str = "auto") -> "Engine":
         return cls(tables=pack_tables(pdt), ret=pack_range_exec(pdt), impl=impl)
 
-    def run(self, win_pkts: np.ndarray) -> EngineResult:
-        """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``."""
-        B, P = win_pkts.shape[0], win_pkts.shape[1]
+    @property
+    def dev(self) -> ops.DeviceTables:
+        """Device-resident MAT programs (uploaded once, then cached)."""
+        if self._dev is None:
+            self._dev = ops.device_tables(self.tables, self.ret)
+        return self._dev
+
+    def _check_windows(self, win_pkts: np.ndarray) -> int:
+        P = win_pkts.shape[1]
         if P < self.tables.n_partitions:
             raise ValueError("fewer windows than partitions")
+        return self.tables.n_partitions
+
+    # ------------------------------------------------------------------
+    # fused path (default)
+    # ------------------------------------------------------------------
+    def run(self, win_pkts: np.ndarray, *, with_trace: bool = True
+            ) -> EngineResult:
+        """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``.
+
+        Dispatch: ``impl="pallas"`` uses the looped path (the Pallas
+        dt_traverse groups flows by SID on the host); everything else
+        runs the fused, fully-jitted scan with a single device→host
+        transfer per batch.
+        """
+        if self.impl == "pallas":
+            return self.run_looped(win_pkts, with_trace=with_trace)
+        P = self._check_windows(win_pkts)
+        labels, recircs, exit_p, regs = fused_partition_walk(
+            jnp.asarray(win_pkts[:, :P]), self.dev,
+            n_subtrees=self.ret.n_subtrees, with_trace=with_trace)
+        # ONE device->host transfer for the whole batch
+        labels, recircs, exit_p, regs = jax.device_get(
+            (labels, recircs, exit_p, regs))
+        trace = [] if regs is None else [regs[p] for p in range(P)]
+        return EngineResult(labels, recircs, exit_p, trace)
+
+    # ------------------------------------------------------------------
+    # streaming path (batches far beyond one device batch)
+    # ------------------------------------------------------------------
+    def run_streaming(self, win_pkts: np.ndarray, *,
+                      micro_batch: int = 4096,
+                      donate: bool | None = None) -> EngineResult:
+        """Chunk ``win_pkts`` into fixed-size padded micro-batches and
+        run each through the fused walk; see ``repro.serve.streaming``."""
+        from repro.serve.streaming import run_streaming
+        return run_streaming(self, win_pkts, micro_batch=micro_batch,
+                             donate=donate)
+
+    # ------------------------------------------------------------------
+    # looped path (per-partition host sync; Pallas dispatch + baseline)
+    # ------------------------------------------------------------------
+    def run_looped(self, win_pkts: np.ndarray, *,
+                   with_trace: bool = True) -> EngineResult:
+        B = win_pkts.shape[0]
+        self._check_windows(win_pkts)
         S = self.ret.n_subtrees
         sid = jnp.zeros(B, jnp.int32)
         done = np.zeros(B, dtype=bool)
-        labels = np.zeros(B, dtype=np.int64)
-        recircs = np.zeros(B, dtype=np.int64)
-        exit_partition = np.zeros(B, dtype=np.int64)
+        # int32 to match the fused path: verdicts from either engine
+        # concatenate without silent upcasts
+        labels = np.zeros(B, dtype=np.int32)
+        recircs = np.zeros(B, dtype=np.int32)
+        exit_partition = np.zeros(B, dtype=np.int32)
         regs_trace: list[np.ndarray] = []
 
         for p in range(self.tables.n_partitions):
             pkts = jnp.asarray(win_pkts[:, p])
             regs = ops.feature_window(pkts, sid, self.tables, impl=self.impl)
-            regs_trace.append(np.asarray(regs))
+            if with_trace:
+                regs_trace.append(np.asarray(regs))
             action = np.asarray(ops.dt_traverse(regs, sid, self.ret,
                                                 impl=self.impl))
             is_exit = action >= S

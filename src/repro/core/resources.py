@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from repro.core.partition import EXIT, PartitionedDT
 from repro.core.rangemark import SubtreeRules, build_subtree_rules

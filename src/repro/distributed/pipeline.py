@@ -11,7 +11,6 @@ example, not by the assigned dry-run mesh, which is 2-axis by spec).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -13,7 +13,6 @@ by dimension-role heuristics that encode the design in DESIGN.md §5:
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import numpy as np

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.features import (
-    FEATURE_TABLE, N_FEATURES, PKT_IAT, PKT_NFIELDS, PKT_VALID, REGISTRY,
+    FEATURE_TABLE, N_FEATURES, PKT_IAT, PKT_NFIELDS, REGISTRY,
 )
 from repro.flows.synthetic import FlowDataset
 from repro.kernels.ref import feature_window_ref

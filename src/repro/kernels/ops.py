@@ -13,6 +13,7 @@ and grouping flows by SID into padded blocks (dt_traverse — the MAT
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,65 @@ def _resolve(impl: str) -> str:
     if impl == "auto":
         return "pallas" if _on_tpu() else "ref"
     return impl
+
+
+# ---------------------------------------------------------------------------
+# device tables — the jit-resident form of the MAT programs
+# ---------------------------------------------------------------------------
+class DeviceTables(NamedTuple):
+    """All MAT contents as device arrays, indexable by SID inside jit.
+
+    This is the fused engine's working set: operator-selection rows
+    (``slot_*``) and range-execution tables (``thresholds`` / ``leaf_*``)
+    live on device for the whole partition walk, so the only host<->device
+    traffic per batch is the packet windows in and the verdicts out.
+    NamedTuple => a pytree, so it passes straight through ``jax.jit``.
+    """
+    slot_op: jnp.ndarray      # (S, k) int32
+    slot_field: jnp.ndarray   # (S, k) int32
+    slot_pred: jnp.ndarray    # (S, k) int32
+    slot_init: jnp.ndarray    # (S, k) f32
+    thresholds: jnp.ndarray   # (S, k, T) f32, +inf padded
+    leaf_lo: jnp.ndarray      # (S, L, k) int32
+    leaf_hi: jnp.ndarray      # (S, L, k) int32
+    leaf_action: jnp.ndarray  # (S, L) int32, -1 padding
+    leaf_valid: jnp.ndarray   # (S, L) int32 (0/1)
+
+
+def device_tables(tables: PackedTables, ret: RangeExecTables) -> DeviceTables:
+    """Upload the packed host tables once; reuse across every batch."""
+    return DeviceTables(
+        slot_op=jnp.asarray(tables.slot_op),
+        slot_field=jnp.asarray(tables.slot_field),
+        slot_pred=jnp.asarray(tables.slot_pred),
+        slot_init=jnp.asarray(tables.slot_init),
+        thresholds=jnp.asarray(ret.thresholds),
+        leaf_lo=jnp.asarray(ret.leaf_lo),
+        leaf_hi=jnp.asarray(ret.leaf_hi),
+        leaf_action=jnp.asarray(ret.leaf_action),
+        leaf_valid=jnp.asarray(ret.leaf_valid.astype(np.int32)),
+    )
+
+
+def fused_step(
+    pkts: jnp.ndarray,        # (B, W, PKT_NFIELDS) one partition's windows
+    sid: jnp.ndarray,         # (B,) int32 active subtree per flow
+    dev: DeviceTables,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One partition stage, fully traceable: registers then action.
+
+    Both phases are the pure-jnp reference math (dense per-flow gathers
+    of the SID-keyed tables), so the whole thing jits into one XLA
+    computation — no host-side grouping, no numpy round-trip.  Returns
+    ``(regs (B, k) f32, action (B,) int32)``.
+    """
+    regs = _ref.feature_window_ref(
+        pkts, dev.slot_op[sid], dev.slot_field[sid], dev.slot_pred[sid],
+        dev.slot_init[sid])
+    action = _ref.dt_traverse_ref(
+        regs, dev.thresholds[sid], dev.leaf_lo[sid], dev.leaf_hi[sid],
+        dev.leaf_action[sid], dev.leaf_valid[sid] > 0)
+    return regs, action
 
 
 # ---------------------------------------------------------------------------

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
@@ -26,7 +25,6 @@ import numpy as np
 from repro.configs import ARCHS, get_arch
 from repro.data.tokens import TokenPipeline
 from repro.distributed import pspec as pspec_lib
-from repro.launch.mesh import make_host_mesh, mesh_shape_dict
 from repro.models import model_zoo
 from repro.train import checkpoint as ckpt_lib
 from repro.train.elastic import StepWatchdog

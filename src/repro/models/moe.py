@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoECfg
+from repro.configs.base import MoECfg
 from repro.distributed.pspec import ParamDef
 from repro.models.layers import COMPUTE_DTYPE, shard
 

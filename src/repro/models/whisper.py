@@ -8,7 +8,6 @@ caches both the self-attention KV and the (fixed) cross-attention KV.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

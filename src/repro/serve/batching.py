@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
 
 import jax
 import jax.numpy as jnp

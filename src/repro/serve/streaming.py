@@ -1,0 +1,120 @@
+"""Streaming batch scheduler for the fused partitioned-DT engine.
+
+The data-plane story (DESIGN.md §4) is millions of concurrent flows over
+a FIXED register pool; the TPU serving analogue is an unbounded flow
+stream over a FIXED device batch.  This module chunks arbitrarily large
+flow batches into fixed-size micro-batches, pads the ragged tail with
+invalid packets (valid = 0 — the same padding the windowing pipeline
+emits), and pushes each chunk through the fused, fully-jitted partition
+walk:
+
+  * every micro-batch has the SAME shape, so XLA compiles the walk
+    exactly once and replays it per chunk;
+  * off-CPU the packet buffer is donated, so back-to-back chunks reuse
+    one device allocation instead of growing the live set;
+  * results land in preallocated host arrays — one device→host
+    transfer per micro-batch, none per partition.
+
+``run_streaming`` is the closed-batch entry point (numpy in → verdicts
+out); ``stream_batches`` is the open-stream form that consumes an
+iterator of flow batches, for callers that never materialise the full
+workload.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inference import (
+    Engine,
+    EngineResult,
+    fused_partition_walk,
+    fused_partition_walk_donated,
+)
+
+
+def _should_donate(donate: bool | None) -> bool:
+    if donate is None:
+        return jax.default_backend() != "cpu"
+    return donate
+
+
+def microbatches(n: int, micro_batch: int) -> Iterator[tuple[int, int]]:
+    """Yield ``[lo, hi)`` bounds covering ``n`` flows in fixed chunks."""
+    if micro_batch <= 0:
+        raise ValueError("micro_batch must be positive")
+    for i in range(math.ceil(n / micro_batch)):
+        yield i * micro_batch, min((i + 1) * micro_batch, n)
+
+
+def run_streaming(
+    engine: Engine,
+    win_pkts: np.ndarray,        # (B, p, W, PKT_NFIELDS), B unbounded
+    *,
+    micro_batch: int = 4096,
+    donate: bool | None = None,
+) -> EngineResult:
+    """Fused inference over a batch larger than one device batch.
+
+    Equivalent to ``engine.run(win_pkts, with_trace=False)`` for any
+    ``B`` and ``micro_batch`` (property-tested, including the padded
+    ragged tail); memory high-water is one micro-batch, not ``B``.
+    """
+    if engine.impl == "pallas":
+        raise ValueError(
+            "run_streaming always executes the fused jnp walk; the Pallas "
+            "dt_traverse groups flows by SID on the host and cannot be "
+            "jitted into it — use Engine.run_looped for impl='pallas'")
+    P = engine._check_windows(win_pkts)
+    B = win_pkts.shape[0]
+    walk = (fused_partition_walk_donated if _should_donate(donate)
+            else fused_partition_walk)
+
+    labels = np.zeros(B, dtype=np.int32)
+    recircs = np.zeros(B, dtype=np.int32)
+    exit_partition = np.zeros(B, dtype=np.int32)
+    # every chunk has the SAME (micro_batch, P, W, F) shape — even when
+    # B < micro_batch — so XLA compiles the walk once for the whole
+    # stream, whatever batch sizes the producer emits
+    mb = micro_batch
+    chunk = None                     # staging buffer, tail chunk only
+    for lo, hi in microbatches(B, mb):
+        m = hi - lo
+        if m == mb:
+            # full chunk: upload straight from the caller's tensor
+            batch = jnp.asarray(win_pkts[lo:hi, :P], dtype=jnp.float32)
+        else:
+            if chunk is None:
+                chunk = np.zeros((mb, P) + win_pkts.shape[2:4], np.float32)
+            chunk[:m] = win_pkts[lo:hi, :P]
+            chunk[m:] = 0.0          # padded flows: every packet invalid
+            batch = jnp.asarray(chunk)
+        lab, rec, exi, _ = jax.device_get(walk(
+            batch, engine.dev,
+            n_subtrees=engine.ret.n_subtrees, with_trace=False))
+        labels[lo:hi] = lab[:m]
+        recircs[lo:hi] = rec[:m]
+        exit_partition[lo:hi] = exi[:m]
+    return EngineResult(labels, recircs, exit_partition, [])
+
+
+def stream_batches(
+    engine: Engine,
+    batches: Iterable[np.ndarray],
+    *,
+    micro_batch: int = 4096,
+    donate: bool | None = None,
+) -> Iterator[EngineResult]:
+    """Open-stream form: one :class:`EngineResult` per incoming batch.
+
+    Each batch is micro-batched independently, so producers can hand
+    over whatever flow counts the capture pipeline emits; the compiled
+    walk is shared across all of them as long as ``(p, W)`` match.
+    """
+    for batch in batches:
+        yield run_streaming(engine, batch, micro_batch=micro_batch,
+                            donate=donate)

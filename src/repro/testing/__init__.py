@@ -1,0 +1,1 @@
+# Test-support helpers importable from the installed package.

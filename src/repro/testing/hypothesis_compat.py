@@ -1,0 +1,142 @@
+"""Property-testing front-end: real ``hypothesis`` when available,
+otherwise a deterministic random-sampling fallback.
+
+The suite's property tests import ``given``/``settings``/``strategies``
+from here instead of from ``hypothesis`` directly.  With the dev extras
+installed (``pip install -e .[dev]``, as CI does) this module is a pure
+re-export and tests get full shrinking/replay behaviour.  In hermetic
+environments without hypothesis the fallback below keeps the suite
+collectable and still exercises each property on a seeded sample of the
+input space — strictly better than an ImportError at collection time.
+
+The fallback implements only the subset this repo uses: ``@given`` over
+positional strategies, ``@settings(max_examples=..., deadline=...)``,
+``assume``, and the ``integers`` / ``floats`` / ``booleans`` /
+``sampled_from`` / ``lists`` / ``just`` strategies.  Draws are seeded
+per-test (stable across runs) and a falsifying example is reported in
+the failure message.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import HealthCheck, assume, given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import random
+    import types
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Unsatisfied(Exception):
+        """Raised by :func:`assume` to discard the current example."""
+
+    def assume(condition) -> bool:
+        if not condition:
+            raise _Unsatisfied()
+        return True
+
+    class HealthCheck:  # minimal placeholder for settings(...) kwargs
+        all = staticmethod(lambda: [])
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(100):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise _Unsatisfied()
+            return _Strategy(draw)
+
+    def _integers(min_value=None, max_value=None):
+        lo = -(2 ** 31) if min_value is None else int(min_value)
+        hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+        def draw(rng):
+            # bias toward the boundaries, where tree/range bugs live
+            r = rng.random()
+            if r < 0.05:
+                return lo
+            if r < 0.1:
+                return hi
+            return rng.randint(lo, hi)
+        return _Strategy(draw)
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, floats=_floats, booleans=_booleans,
+        sampled_from=_sampled_from, just=_just, lists=_lists,
+    )
+
+    _DEFAULT_MAX_EXAMPLES = 50
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                ran = 0
+                for _ in range(n * 5):
+                    if ran >= n:
+                        break
+                    vals = ()
+                    try:
+                        vals = tuple(s.example_from(rng) for s in strats)
+                        fn(*args, *vals, **kwargs)
+                    except _Unsatisfied:
+                        continue
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (compat shim): "
+                            f"{fn.__name__}{vals!r}") from e
+                    ran += 1
+                if n > 0 and ran == 0:
+                    raise AssertionError(
+                        f"{fn.__name__}: no examples satisfied assume()/"
+                        f"filter() — the property was never checked")
+            # pytest must not mistake the drawn parameters for fixtures:
+            # drop the __wrapped__ link so inspect.signature sees
+            # (*args, **kwargs) instead of the inner test's params
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

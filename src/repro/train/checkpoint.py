@@ -20,7 +20,6 @@ import json
 import os
 import threading
 import time
-from typing import Any
 
 import jax
 import numpy as np

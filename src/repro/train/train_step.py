@@ -8,7 +8,6 @@ gradient all-reduce over "pod" is the only cross-pod traffic per step.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax

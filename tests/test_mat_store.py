@@ -5,7 +5,6 @@ from repro.core.mat import (
     FlowStore, collision_curve, crc32_hash, random_five_tuples,
 )
 from repro.core.recirc import time_to_detection
-from repro.flows.windows import window_bounds
 
 
 def test_crc_deterministic_and_spread():

@@ -1,7 +1,6 @@
 """Model zoo: per-arch smoke tests (reduced configs, one train step,
 shape + NaN assertions) and cache-path equivalence (prefill+decode ==
 full forward) -- the serving-correctness property."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Algorithm-1 partitioned training: structural invariants + routing."""
-import numpy as np
 
 from repro.core.partition import EXIT, train_partitioned_dt
 from repro.core.tree import macro_f1

@@ -5,13 +5,13 @@ lower+compile and produce strictly fewer collective bytes than the
 baseline layouts on the same miniature cell.
 """
 import numpy as np
-import pytest
 
 from tests.conftest import run_subprocess
 
 
 def test_blockwise_attention_equals_naive():
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.models import layers as L
     rng = np.random.default_rng(0)
     B, Tq, Tk, Hq, Hkv, Dh = 2, 8, 48, 8, 2, 16
@@ -43,7 +43,8 @@ def test_blockwise_attention_equals_naive():
 def test_moe_einsum_decode_equals_scatter_path():
     """The §Perf einsum dispatch must match the scatter dispatch when
     neither drops tokens."""
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.configs import get_arch
     from repro.distributed import pspec
     from repro.models import moe as moe_lib
@@ -111,6 +112,7 @@ def test_windowed_decode_slice_correct():
     """Sliding-window decode with a window-sized cache slice must equal
     window-masked attention over the full cache (the §Perf long_500k
     change) — tested directly at the attend() level."""
+    import jax
     import jax.numpy as jnp
     from repro.models import layers as L
     rng = np.random.default_rng(2)

@@ -1,7 +1,6 @@
 """Range marking: prefix covers + rule-table semantics == tree traversal."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core.rangemark import (
     build_subtree_rules, prefix_cover_count, quantize_thresholds,

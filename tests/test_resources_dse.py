@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.core.dse import (
-    Config, GP, SearchSpace, bayes_search, expected_improvement,
+    GP, SearchSpace, bayes_search, expected_improvement,
     make_splidt_evaluator,
 )
 from repro.core.recirc import HADOOP, WEBSERVER, recirc_bandwidth

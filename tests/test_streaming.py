@@ -1,0 +1,83 @@
+"""Streaming scheduler: chunked + padded micro-batches over the fused
+engine must be indistinguishable from one full-batch run, for every
+chunking — including ragged tails and chunks larger than the batch."""
+import numpy as np
+import pytest
+
+from repro.core.inference import Engine
+from repro.flows.windows import window_packets
+from repro.serve.streaming import microbatches, run_streaming, stream_batches
+
+
+@pytest.fixture(scope="module")
+def stream_setup(trained_pdt):
+    pdt, Xw, tr = trained_pdt
+    wp = window_packets(tr, 3)
+    eng = Engine.from_model(pdt)
+    full = eng.run(wp, with_trace=False)
+    oracle = pdt.predict(Xw, return_trace=True)
+    return eng, wp, full, oracle
+
+
+def _assert_same(res, full):
+    np.testing.assert_array_equal(res.labels, full.labels)
+    np.testing.assert_array_equal(res.recircs, full.recircs)
+    np.testing.assert_array_equal(res.exit_partition, full.exit_partition)
+
+
+def test_microbatch_bounds_cover_exactly():
+    bounds = list(microbatches(103, 32))
+    assert bounds == [(0, 32), (32, 64), (64, 96), (96, 103)]
+    assert list(microbatches(32, 32)) == [(0, 32)]
+    with pytest.raises(ValueError):
+        list(microbatches(10, 0))
+
+
+@pytest.mark.parametrize("micro_batch", [1, 7, 64, 10_000])
+def test_streaming_equals_full_batch(stream_setup, micro_batch):
+    """Every chunking — single-flow, ragged tail, one giant chunk —
+    reproduces the full-batch fused run exactly."""
+    eng, wp, full, _ = stream_setup
+    res = run_streaming(eng, wp, micro_batch=micro_batch)
+    _assert_same(res, full)
+
+
+def test_streaming_matches_oracle(stream_setup):
+    """End-to-end: chunked streaming still equals the numpy oracle
+    (labels AND recirculation counts — the bandwidth model's input)."""
+    eng, wp, _, (labels, recircs, exit_p) = stream_setup
+    res = eng.run_streaming(wp, micro_batch=50)
+    np.testing.assert_array_equal(res.labels, labels)
+    np.testing.assert_array_equal(res.recircs, recircs)
+    np.testing.assert_array_equal(res.exit_partition, exit_p)
+
+
+def test_streaming_padded_tail_is_isolated(stream_setup):
+    """A ragged tail is padded with invalid packets; padding must never
+    leak into real flows' verdicts (micro_batch chosen so the last
+    chunk is mostly padding)."""
+    eng, wp, full, _ = stream_setup
+    B = wp.shape[0]
+    mb = B - 1            # tail chunk holds exactly 1 real flow
+    res = run_streaming(eng, wp, micro_batch=mb)
+    _assert_same(res, full)
+
+
+def test_stream_batches_generator(stream_setup):
+    """Open-stream form: per-batch results concatenate to the full run."""
+    eng, wp, full, _ = stream_setup
+    cuts = [0, 13, 200, wp.shape[0]]
+    parts = [wp[a:b] for a, b in zip(cuts, cuts[1:])]
+    outs = list(stream_batches(eng, parts, micro_batch=64))
+    assert len(outs) == len(parts)
+    labels = np.concatenate([o.labels for o in outs])
+    recircs = np.concatenate([o.recircs for o in outs])
+    np.testing.assert_array_equal(labels, full.labels)
+    np.testing.assert_array_equal(recircs, full.recircs)
+
+
+def test_streaming_donate_flag_explicit(stream_setup):
+    """donate=False must be honoured on any backend and stay exact."""
+    eng, wp, full, _ = stream_setup
+    res = run_streaming(eng, wp, micro_batch=33, donate=False)
+    _assert_same(res, full)

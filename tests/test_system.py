@@ -2,7 +2,6 @@
 pipeline (synthetic flows -> windowed features -> Algorithm-1 training
 -> rule generation -> data-plane engine -> resource & recirc models)
 reproducing the paper's headline claims in structure."""
-import numpy as np
 import pytest
 
 from repro.core.baselines import best_oneshot_for_flows

@@ -1,7 +1,6 @@
 """CART trainer: correctness + the SpliDT k-feature budget."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypothesis_compat import given, settings, strategies as st
 
 from repro.core.tree import feature_importance, macro_f1, train_tree
 
