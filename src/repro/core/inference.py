@@ -1,34 +1,42 @@
 """The partitioned-inference engine (paper Fig. 4, TPU-native).
 
 Orchestrates the two data-plane phases per partition window:
-  1. Feature Collection & Engineering — ``kernels.ops.feature_window``
-     fills the k registers for each flow's active subtree;
-  2. Subtree Model Prediction — ``kernels.ops.dt_traverse`` range-marks
-     the registers and emits the action (next SID or exit class).
+  1. Feature Collection & Engineering — fill the k registers for each
+     flow's active subtree (``kernels.ops``);
+  2. Subtree Model Prediction — range-mark the registers and emit the
+     action (next SID or exit class).
 Between partitions the engine performs the "recirculation": SID update +
 register reset, counted per flow for the bandwidth model.
 
-Two execution paths:
+Execution is unified behind the :class:`ExecutionBackend` protocol —
+one device-resident partition walk (:func:`partition_walk`, a single
+jitted ``jax.lax.scan`` over partitions) parameterised by the per-stage
+step function:
 
-* **fused** (default) — the whole partition walk is ONE jitted
-  ``jax.lax.scan`` over partitions (:func:`fused_partition_walk`).  The
-  loop carry is ``(sid, done, labels, recircs, exit_partition)``; each
-  step runs feature_window → dt_traverse → recirculation without
-  leaving the device.  The only host↔device traffic per batch is the
-  packet windows in and one ``jax.device_get`` of the verdicts out —
-  the TPU analogue of keeping the per-packet loop inside the pipeline
-  (pForest / Taurus style).
-* **looped** — the original host-side Python loop with a per-partition
-  device→host sync.  Kept as the dispatch point for the Pallas kernels
-  (whose SID-grouping is host-side) and as the benchmark baseline.
+* **fused** (default off-TPU) — dense jnp step (``ops.fused_step``):
+  per-flow gathers of the SID-keyed tables, everything in one XLA
+  computation.
+* **pallas** (default on TPU; interpret mode elsewhere) — the Pallas
+  kernels behind the in-jit SID dispatch (``ops.fused_step_pallas``):
+  flows are argsorted/scattered into SID-homogeneous capacity blocks
+  *inside* jit, so the MoE-style grouping costs zero host round trips
+  and the walk still crosses the device→host boundary exactly once per
+  batch.
+* **looped** — host-side Python loop with a per-partition sync; the
+  benchmark baseline and the per-op dispatch point.
 
-The engine must agree exactly with :meth:`PartitionedDT.predict` (the
-offline numpy oracle); property tests enforce this for both paths.
+All backends share :class:`EngineResult` semantics and must agree with
+:meth:`PartitionedDT.predict` (the offline numpy oracle) — and, since
+``kernels.ref.ordered_wsum`` pinned the reduction order, they agree
+bit-exactly; property tests enforce this for every backend.
+
+Backend selection: ``Engine.run(win_pkts, impl=...)`` or the engine's
+``impl=`` field; see :func:`get_backend` for the selection matrix.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +56,18 @@ class EngineResult:
     regs_trace: list[np.ndarray] # per-partition register snapshots
 
 
-def _fused_partition_walk(
+# step: (pkts (B, W, F), sid (B,), dev) -> (regs (B, k), action (B,))
+StepFn = Callable[[jnp.ndarray, jnp.ndarray, ops.DeviceTables],
+                  tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def _partition_walk(
     win_pkts: jnp.ndarray,       # (B, P, W, PKT_NFIELDS)
     dev: ops.DeviceTables,
     *,
     n_subtrees: int,
     with_trace: bool = False,
+    step: StepFn = ops.fused_step,
 ):
     """Device-resident partition walk: scan partitions, carry flow state.
 
@@ -61,14 +75,16 @@ def _fused_partition_walk(
     except ``regs`` (P, B, k) f32, which is ``None`` unless
     ``with_trace``.  Actions ``>= n_subtrees`` exit with class
     ``action - n_subtrees``; smaller actions recirculate to that SID.
+    ``step`` is the backend's per-partition stage (dense jnp or Pallas
+    kernels); the walk itself is backend-agnostic.
     """
     B, P = win_pkts.shape[0], win_pkts.shape[1]
     S = n_subtrees
 
-    def step(carry, xs):
+    def body(carry, xs):
         sid, done, labels, recircs, exit_p = carry
         p, pkts = xs
-        regs, action = ops.fused_step(pkts, sid, dev)
+        regs, action = step(pkts, sid, dev)
         is_exit = action >= S
         active = ~done
         exiting = active & is_exit
@@ -91,22 +107,160 @@ def _fused_partition_walk(
         jnp.zeros(B, jnp.int32),            # exit_partition
     )
     xs = (jnp.arange(P, dtype=jnp.int32), jnp.swapaxes(win_pkts, 0, 1))
-    (sid, done, labels, recircs, exit_p), regs = jax.lax.scan(step, init, xs)
+    (sid, done, labels, recircs, exit_p), regs = jax.lax.scan(body, init, xs)
     return labels, recircs, exit_p, regs
 
 
-fused_partition_walk = functools.partial(
-    jax.jit, static_argnames=("n_subtrees", "with_trace"),
-)(_fused_partition_walk)
+_WALK_STATIC = ("n_subtrees", "with_trace", "step")
+
+partition_walk = jax.jit(_partition_walk, static_argnames=_WALK_STATIC)
 
 # Donating the packet buffer lets back-to-back micro-batches reuse the
 # same device allocation (streaming path).  CPU can't donate host numpy
 # buffers usefully, so the streaming scheduler only picks this variant
 # off-CPU.
-fused_partition_walk_donated = functools.partial(
-    jax.jit, static_argnames=("n_subtrees", "with_trace"),
-    donate_argnums=(0,),
-)(_fused_partition_walk)
+partition_walk_donated = jax.jit(_partition_walk, static_argnames=_WALK_STATIC,
+                                 donate_argnums=(0,))
+
+# PR 1 names (step defaults to the dense jnp stage) — kept for callers
+# that predate the backend layer.
+fused_partition_walk = partition_walk
+fused_partition_walk_donated = partition_walk_donated
+
+
+# ---------------------------------------------------------------------------
+# execution backends
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """One engine execution strategy.
+
+    Implementations must produce identical :class:`EngineResult`s (the
+    shared correctness oracle is ``PartitionedDT.predict`` +
+    ``kernels.ref``); they differ only in how the partition walk
+    executes.  ``step`` is the jit-traceable per-partition stage for
+    walk-based backends, or ``None`` when the backend does not run the
+    shared walk (looped).
+    """
+    name: str
+    step: StepFn | None
+
+    def run(self, engine: "Engine", win_pkts: np.ndarray, *,
+            with_trace: bool = True) -> EngineResult: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkBackend:
+    """Fully-jitted walk: ONE device→host transfer per batch.
+
+    ``fused`` and ``pallas`` are both instances of this — they share the
+    scan, the carry semantics, and the single ``jax.device_get``; only
+    the per-partition ``step`` differs.
+    """
+    name: str
+    step: StepFn
+
+    def run(self, engine: "Engine", win_pkts: np.ndarray, *,
+            with_trace: bool = True) -> EngineResult:
+        P = engine._check_windows(win_pkts)
+        labels, recircs, exit_p, regs = partition_walk(
+            jnp.asarray(win_pkts[:, :P]), engine.dev,
+            n_subtrees=engine.ret.n_subtrees, with_trace=with_trace,
+            step=self.step)
+        # ONE device->host transfer for the whole batch
+        labels, recircs, exit_p, regs = jax.device_get(
+            (labels, recircs, exit_p, regs))
+        trace = [] if regs is None else [regs[p] for p in range(P)]
+        return EngineResult(labels, recircs, exit_p, trace)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopedBackend:
+    """Host-side per-partition loop (one device→host sync per hop).
+
+    Kept as the benchmark baseline and the per-op dispatch point: each
+    hop calls ``ops.feature_window`` / ``ops.dt_traverse`` with the
+    engine's per-op impl, so individual kernels can be exercised in
+    isolation.
+    """
+    name: str = "looped"
+    step: None = None
+
+    @staticmethod
+    def _op_impl(impl: str) -> str:
+        if impl in ("pallas", "auto"):
+            return impl
+        return "ref"
+
+    def run(self, engine: "Engine", win_pkts: np.ndarray, *,
+            with_trace: bool = True) -> EngineResult:
+        B = win_pkts.shape[0]
+        engine._check_windows(win_pkts)
+        impl = self._op_impl(engine.impl)
+        S = engine.ret.n_subtrees
+        sid = jnp.zeros(B, jnp.int32)
+        done = np.zeros(B, dtype=bool)
+        # int32 to match the walk backends: verdicts from any backend
+        # concatenate without silent upcasts
+        labels = np.zeros(B, dtype=np.int32)
+        recircs = np.zeros(B, dtype=np.int32)
+        exit_partition = np.zeros(B, dtype=np.int32)
+        regs_trace: list[np.ndarray] = []
+
+        for p in range(engine.tables.n_partitions):
+            pkts = jnp.asarray(win_pkts[:, p])
+            regs = ops.feature_window(pkts, sid, engine.tables, impl=impl)
+            if with_trace:
+                regs_trace.append(np.asarray(regs))
+            action = np.asarray(ops.dt_traverse(regs, sid, engine.ret,
+                                                impl=impl))
+            is_exit = action >= S
+            active = ~done
+            exiting = active & is_exit
+            labels[exiting] = action[exiting] - S
+            exit_partition[exiting] = p
+            done |= exiting
+            cont = active & ~is_exit
+            recircs[cont] += 1           # one control packet per transition
+            # "recirculation": update SID register, reset feature registers
+            sid = jnp.where(jnp.asarray(cont), jnp.asarray(action), sid)
+        return EngineResult(labels, recircs, exit_partition, regs_trace)
+
+
+FUSED_BACKEND = WalkBackend(name="fused", step=ops.fused_step)
+PALLAS_BACKEND = WalkBackend(name="pallas", step=ops.fused_step_pallas)
+LOOPED_BACKEND = LoopedBackend()
+
+_BACKENDS: dict[str, ExecutionBackend] = {
+    "fused": FUSED_BACKEND,
+    "pallas": PALLAS_BACKEND,
+    "looped": LOOPED_BACKEND,
+}
+
+
+def get_backend(impl: str = "auto") -> ExecutionBackend:
+    """Backend selection matrix (see README §Engine architecture):
+
+    ==========  =====================================================
+    impl        backend
+    ==========  =====================================================
+    auto        pallas on TPU, fused elsewhere
+    fused, ref  fused (dense jnp walk)
+    pallas      pallas (Pallas kernels + in-jit SID dispatch;
+                interpret mode off-TPU)
+    looped      looped (host loop, per-partition sync)
+    ==========  =====================================================
+    """
+    if impl == "auto":
+        impl = "pallas" if ops._on_tpu() else "fused"
+    if impl == "ref":
+        impl = "fused"
+    try:
+        return _BACKENDS[impl]
+    except KeyError:
+        raise ValueError(
+            f"unknown impl {impl!r}; options: auto, ref, "
+            + ", ".join(sorted(_BACKENDS))) from None
 
 
 @dataclasses.dataclass
@@ -135,73 +289,41 @@ class Engine:
         return self.tables.n_partitions
 
     # ------------------------------------------------------------------
-    # fused path (default)
+    # unified entry point
     # ------------------------------------------------------------------
-    def run(self, win_pkts: np.ndarray, *, with_trace: bool = True
-            ) -> EngineResult:
+    def run(self, win_pkts: np.ndarray, *, with_trace: bool = True,
+            impl: str | None = None) -> EngineResult:
         """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``.
 
-        Dispatch: ``impl="pallas"`` uses the looped path (the Pallas
-        dt_traverse groups flows by SID on the host); everything else
-        runs the fused, fully-jitted scan with a single device→host
-        transfer per batch.
+        Dispatches to :func:`get_backend` (``impl`` overrides the
+        engine's default).  Walk backends (fused / pallas) run the
+        fully-jitted scan with a single device→host transfer per batch;
+        ``looped`` syncs per partition.
         """
-        if self.impl == "pallas":
-            return self.run_looped(win_pkts, with_trace=with_trace)
-        P = self._check_windows(win_pkts)
-        labels, recircs, exit_p, regs = fused_partition_walk(
-            jnp.asarray(win_pkts[:, :P]), self.dev,
-            n_subtrees=self.ret.n_subtrees, with_trace=with_trace)
-        # ONE device->host transfer for the whole batch
-        labels, recircs, exit_p, regs = jax.device_get(
-            (labels, recircs, exit_p, regs))
-        trace = [] if regs is None else [regs[p] for p in range(P)]
-        return EngineResult(labels, recircs, exit_p, trace)
+        return get_backend(impl or self.impl).run(
+            self, win_pkts, with_trace=with_trace)
 
     # ------------------------------------------------------------------
     # streaming path (batches far beyond one device batch)
     # ------------------------------------------------------------------
     def run_streaming(self, win_pkts: np.ndarray, *,
                       micro_batch: int = 4096,
-                      donate: bool | None = None) -> EngineResult:
+                      donate: bool | None = None,
+                      mesh=None,
+                      impl: str | None = None,
+                      inflight: int = 2) -> EngineResult:
         """Chunk ``win_pkts`` into fixed-size padded micro-batches and
-        run each through the fused walk; see ``repro.serve.streaming``."""
+        run each through a walk backend; with ``mesh`` the micro-batch
+        fans out across the mesh's flow-batch axis via ``shard_map``.
+        See ``repro.serve.streaming``."""
         from repro.serve.streaming import run_streaming
         return run_streaming(self, win_pkts, micro_batch=micro_batch,
-                             donate=donate)
+                             donate=donate, mesh=mesh, impl=impl,
+                             inflight=inflight)
 
     # ------------------------------------------------------------------
-    # looped path (per-partition host sync; Pallas dispatch + baseline)
+    # looped path (per-partition host sync; per-op dispatch + baseline)
     # ------------------------------------------------------------------
     def run_looped(self, win_pkts: np.ndarray, *,
                    with_trace: bool = True) -> EngineResult:
-        B = win_pkts.shape[0]
-        self._check_windows(win_pkts)
-        S = self.ret.n_subtrees
-        sid = jnp.zeros(B, jnp.int32)
-        done = np.zeros(B, dtype=bool)
-        # int32 to match the fused path: verdicts from either engine
-        # concatenate without silent upcasts
-        labels = np.zeros(B, dtype=np.int32)
-        recircs = np.zeros(B, dtype=np.int32)
-        exit_partition = np.zeros(B, dtype=np.int32)
-        regs_trace: list[np.ndarray] = []
-
-        for p in range(self.tables.n_partitions):
-            pkts = jnp.asarray(win_pkts[:, p])
-            regs = ops.feature_window(pkts, sid, self.tables, impl=self.impl)
-            if with_trace:
-                regs_trace.append(np.asarray(regs))
-            action = np.asarray(ops.dt_traverse(regs, sid, self.ret,
-                                                impl=self.impl))
-            is_exit = action >= S
-            active = ~done
-            exiting = active & is_exit
-            labels[exiting] = action[exiting] - S
-            exit_partition[exiting] = p
-            done |= exiting
-            cont = active & ~is_exit
-            recircs[cont] += 1           # one control packet per transition
-            # "recirculation": update SID register, reset feature registers
-            sid = jnp.where(jnp.asarray(cont), jnp.asarray(action), sid)
-        return EngineResult(labels, recircs, exit_partition, regs_trace)
+        return LOOPED_BACKEND.run(self, win_pkts, with_trace=with_trace)

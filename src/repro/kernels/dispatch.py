@@ -1,0 +1,126 @@
+"""Device-resident SID dispatch for the Pallas range-match kernel.
+
+The switch matches each packet against its flow's ACTIVE subtree; the
+TPU analogue streams one subtree's tables into VMEM per grid step,
+which requires flows grouped into SID-homogeneous blocks.  PR 1 did
+that grouping on the host (numpy sort + per-segment copy) — a
+device→host round trip per recirculation hop that forced the fused
+engine onto dense jnp math.  Here the grouping is pure jnp (argsort +
+bincount + searchsorted + scatter), so it jits INTO the fused partition
+walk and the whole multi-partition walk stays on device.
+
+Capacity bound (the MoE "expert capacity" trick applied to subtrees):
+with B flows and S subtrees, block-aligning every SID segment needs at
+most ceil(B / block_b) + S blocks — each SID wastes strictly less than
+one block of padding.  The bound depends only on static shapes, so the
+dispatch has fixed shapes at trace time and the data-dependent routing
+lives entirely in device-side gathers/scatters.
+
+This module also owns the padding helpers shared by the streaming
+scheduler (`repro.serve.streaming`) and the Pallas block padding
+(`repro.kernels.feature_window`): one definition of "pad the leading
+axis with zero rows" instead of three.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_up(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n``."""
+    return -(-n // m) * m
+
+
+def pad_axis0(x, target: int):
+    """Pad the leading axis with zero rows up to ``target`` (no-op if
+    already there).  Zero rows are the pipeline's "invalid" encoding:
+    packets with valid=0 contribute to nothing downstream.  Works on
+    jnp and numpy arrays alike."""
+    n = x.shape[0]
+    if n == target:
+        return x
+    if n > target:
+        raise ValueError(f"cannot pad {n} rows down to {target}")
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    return xp.pad(x, ((0, target - n),) + ((0, 0),) * (x.ndim - 1))
+
+
+def capacity_blocks(n_flows: int, n_subtrees: int, block_b: int) -> int:
+    """Static worst-case block count for SID-grouping ``n_flows`` flows:
+    ceil(B/bb) full blocks of payload plus at most one partial block of
+    padding per subtree."""
+    return -(-n_flows // block_b) + n_subtrees
+
+
+class SidDispatch(NamedTuple):
+    """In-jit flow→block routing plan (all device arrays).
+
+    order     (B,)  flow indices sorted by SID (segment-major)
+    dest      (B,)  padded-buffer slot of sorted flow i
+    block_sid (nb,) SID each capacity block serves (tail blocks past the
+                    last used one are clamped to a valid SID; their rows
+                    are never gathered back)
+    """
+    order: jnp.ndarray
+    dest: jnp.ndarray
+    block_sid: jnp.ndarray
+
+
+def sid_dispatch(sid: jnp.ndarray, *, n_subtrees: int,
+                 block_b: int) -> SidDispatch:
+    """Plan the SID grouping entirely in jnp (jit-safe, static shapes).
+
+    Each SID's flows land contiguously at a block-aligned offset; the
+    per-block SID map is recovered by binary search over the running
+    block count.  Equivalent to the host-side sort+segment of PR 1, but
+    traceable — it fuses into the partition-walk scan.
+    """
+    B = sid.shape[0]
+    counts = jnp.bincount(sid, length=n_subtrees)            # (S,)
+    bps = -(-counts // block_b)                              # blocks per SID
+    block_end = jnp.cumsum(bps)
+    block_start = block_end - bps
+    seg_start = jnp.cumsum(counts) - counts                  # sorted offsets
+    order = jnp.argsort(sid, stable=True)
+    ssid = sid[order]
+    rank = jnp.arange(B, dtype=counts.dtype) - seg_start[ssid]
+    dest = block_start[ssid] * block_b + rank
+    nb = capacity_blocks(B, n_subtrees, block_b)
+    block_sid = jnp.searchsorted(block_end, jnp.arange(nb), side="right")
+    block_sid = jnp.minimum(block_sid, n_subtrees - 1).astype(jnp.int32)
+    return SidDispatch(order=order, dest=dest, block_sid=block_sid)
+
+
+def dispatch_dt_traverse(
+    regs: jnp.ndarray,         # (B, k) f32 feature registers
+    sid: jnp.ndarray,          # (B,) int32 active subtree per flow
+    thresholds: jnp.ndarray,   # (S, k, T) f32
+    leaf_lo: jnp.ndarray,      # (S, L, k) int32
+    leaf_hi: jnp.ndarray,      # (S, L, k) int32
+    leaf_action: jnp.ndarray,  # (S, L) int32
+    leaf_valid: jnp.ndarray,   # (S, L) int32 (0/1)
+    *,
+    interpret: bool,
+    block_b: int,
+) -> jnp.ndarray:
+    """SID-grouped Pallas range-match, fully inside jit -> action (B,).
+
+    Scatter flows to capacity-padded SID blocks, run the kernel (one
+    subtree's tables per grid step), gather actions back to flow order.
+    Padded rows carry zero registers; their actions are computed but
+    never read."""
+    from repro.kernels.dt_traverse import dt_traverse_pallas
+
+    B, k = regs.shape
+    S = int(thresholds.shape[0])
+    d = sid_dispatch(sid, n_subtrees=S, block_b=block_b)
+    nb = capacity_blocks(B, S, block_b)
+    regs_g = jnp.zeros((nb * block_b, k), regs.dtype)
+    regs_g = regs_g.at[d.dest].set(regs[d.order])
+    out = dt_traverse_pallas(
+        d.block_sid, regs_g, thresholds, leaf_lo, leaf_hi, leaf_action,
+        leaf_valid, interpret=interpret, block_b=block_b)[:, 0]
+    return jnp.zeros((B,), jnp.int32).at[d.order].set(out[d.dest])

@@ -8,11 +8,13 @@ the *range-marking* semantics the switch itself uses:
     hit(l) = marks within leaf l's per-slot interval (dense match)
     action = first hit (TCAM priority encode)
 
-Flows are grouped by SID outside the kernel (MoE-dispatch style: sort by
-SID, pad each segment to the flow-block size) and the grid prefetches a
-``block_sid`` map so each grid step streams ONE subtree's threshold and
-leaf tables into VMEM alongside its flow block — the TPU analogue of the
-switch activating one subtree's MAT entries per pipeline pass.
+Flows are grouped by SID outside the kernel but INSIDE jit
+(``repro.kernels.dispatch``: argsort by SID, scatter each segment to a
+capacity-padded block offset — MoE-dispatch style) and the grid
+prefetches a ``block_sid`` map so each grid step streams ONE subtree's
+threshold and leaf tables into VMEM alongside its flow block — the TPU
+analogue of the switch activating one subtree's MAT entries per
+pipeline pass.
 
 VMEM per step: regs (Bb, k) + thresholds (k, T) + leaf tables (L, k) x2
 + actions (L,) — a few tens of KB at Bb=128, k<=8, T,L<=64.

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import features as F
+from repro.kernels.dispatch import pad_axis0, round_up
+from repro.kernels.ref import ordered_wsum
 
 BLOCK_B = 128
 
@@ -56,9 +58,11 @@ def _kernel(pkts_ref, op_ref, field_ref, pred_ref, init_ref, out_ref):
         val = jnp.where(fsel == c, pkts[..., c][:, :, None], val)
 
     mf = mask.astype(jnp.float32)
-    count = mf.sum(axis=1)
-    total = (val * mf).sum(axis=1)
-    sumsq = (val * val * mf).sum(axis=1)
+    # same canonical left-to-right order as the jnp reference, so the
+    # kernel's registers are bit-identical to training-time features
+    count = ordered_wsum(mf)
+    total = ordered_wsum(val * mf)
+    sumsq = ordered_wsum(val * val * mf)
     neg_big = jnp.float32(-3.4e38)
     pos_big = jnp.float32(3.4e38)
     mx = jnp.max(jnp.where(mask, val, neg_big), axis=1)
@@ -98,14 +102,11 @@ def feature_window_pallas(
     B, W, nf = pkts.shape
     k = slot_op.shape[1]
     bb = min(block_b, B)
-    pad = (-B) % bb
-    if pad:
-        pkts = jnp.pad(pkts, ((0, pad), (0, 0), (0, 0)))
-        slot_op = jnp.pad(slot_op, ((0, pad), (0, 0)))
-        slot_field = jnp.pad(slot_field, ((0, pad), (0, 0)))
-        slot_pred = jnp.pad(slot_pred, ((0, pad), (0, 0)))
-        slot_init = jnp.pad(slot_init, ((0, pad), (0, 0)))
-    Bp = B + pad
+    Bp = round_up(B, bb)
+    if Bp != B:
+        pkts, slot_op, slot_field, slot_pred, slot_init = (
+            pad_axis0(x, Bp)
+            for x in (pkts, slot_op, slot_field, slot_pred, slot_init))
     grid = (Bp // bb,)
     out = pl.pallas_call(
         _kernel,

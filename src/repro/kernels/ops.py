@@ -5,10 +5,11 @@ Each op dispatches between three implementations:
   * ``pallas``  — the Pallas kernel, ``interpret=True`` off-TPU
   * ``auto``    — pallas on TPU, ref elsewhere
 
-The wrappers also own the host-side data marshalling the switch pipeline
-would do in hardware: gathering per-SID operator rows (feature_window)
-and grouping flows by SID into padded blocks (dt_traverse — the MAT
-"match on SID" stage).
+All marshalling is device-resident: per-SID operator rows are gathered
+in-jit (feature_window), and dt_traverse groups flows by SID into
+padded blocks via ``repro.kernels.dispatch`` (the MAT "match on SID"
+stage) — pure jnp, so both the per-op entry points and the fused
+partition-walk steps trace into a single XLA computation.
 """
 from __future__ import annotations
 
@@ -23,7 +24,8 @@ from repro.core.range_tables import RangeExecTables
 from repro.core.tables import PackedTables
 from repro.kernels import ref as _ref
 from repro.kernels.chunk_scan import chunk_scan_pallas
-from repro.kernels.dt_traverse import BLOCK_B, dt_traverse_pallas
+from repro.kernels.dispatch import dispatch_dt_traverse
+from repro.kernels.dt_traverse import BLOCK_B
 from repro.kernels.feature_window import feature_window_pallas
 
 
@@ -96,6 +98,30 @@ def fused_step(
     return regs, action
 
 
+def fused_step_pallas(
+    pkts: jnp.ndarray,        # (B, W, PKT_NFIELDS) one partition's windows
+    sid: jnp.ndarray,         # (B,) int32 active subtree per flow
+    dev: DeviceTables,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One partition stage through the Pallas kernels, fully traceable.
+
+    Same contract as :func:`fused_step`, but the register fill runs the
+    blocked Pallas feature kernel and the range match runs the SID-
+    grouped Pallas kernel behind the in-jit dispatch — no host-side
+    grouping, so the whole partition walk jits into one computation
+    (``interpret=True`` off-TPU keeps it runnable anywhere).
+    """
+    interpret = not _on_tpu()
+    regs = feature_window_pallas(
+        pkts, dev.slot_op[sid], dev.slot_field[sid], dev.slot_pred[sid],
+        dev.slot_init[sid], interpret=interpret)
+    action = dispatch_dt_traverse(
+        regs, sid, dev.thresholds, dev.leaf_lo, dev.leaf_hi,
+        dev.leaf_action, dev.leaf_valid,
+        interpret=interpret, block_b=BLOCK_B)
+    return regs, action
+
+
 # ---------------------------------------------------------------------------
 # feature_window
 # ---------------------------------------------------------------------------
@@ -139,34 +165,9 @@ def dt_traverse(
     if impl == "ref":
         return _ref.dt_traverse_ref(regs, thr[sid], lo[sid], hi[sid],
                                     act[sid], val[sid] > 0)
-
-    # group flows by SID into padded blocks (MoE-dispatch style)
-    sid_np = np.asarray(sid)
-    B = sid_np.shape[0]
-    order = np.argsort(sid_np, kind="stable")
-    sids, counts = np.unique(sid_np, return_counts=True)
-    blocks_per_sid = [-(-int(c) // block_b) for c in counts]
-    nb = int(sum(blocks_per_sid))
-    padded = nb * block_b
-    # scatter each SID segment to a block-aligned offset
-    perm_dst = np.zeros(B, dtype=np.int64)
-    block_sid = np.zeros(nb, dtype=np.int32)
-    off = blk = 0
-    src = 0
-    for s, c, nbl in zip(sids, counts, blocks_per_sid):
-        perm_dst[src:src + c] = np.arange(c) + off
-        block_sid[blk:blk + nbl] = s
-        off += nbl * block_b
-        blk += nbl
-        src += c
-    regs_g = jnp.zeros((padded, regs.shape[1]), regs.dtype)
-    regs_g = regs_g.at[jnp.asarray(perm_dst)].set(regs[jnp.asarray(order)])
-    out = dt_traverse_pallas(
-        jnp.asarray(block_sid), regs_g, thr, lo, hi, act, val,
-        interpret=not _on_tpu(), block_b=block_b)[:, 0]
-    # un-permute
-    result = jnp.zeros((B,), jnp.int32)
-    return result.at[jnp.asarray(order)].set(out[jnp.asarray(perm_dst)])
+    # SID grouping runs in-jit (MoE-dispatch style) — no host round trip
+    return dispatch_dt_traverse(regs, sid, thr, lo, hi, act, val,
+                                interpret=not _on_tpu(), block_b=block_b)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,29 @@ from repro.core import features as F
 # feature_window: windowed stateful feature accumulation
 # ---------------------------------------------------------------------------
 
+_UNROLL_W = 256
+
+
+def ordered_wsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Strict left-to-right f32 sum over the window axis (axis 1).
+
+    The canonical reduction order shared by the offline feature pipeline
+    (``window_features``, 41-slot tensor), both engines' k-slot
+    reduction, and the Pallas kernel.  A plain ``.sum(axis=1)`` lets XLA
+    pick a shape-dependent summation tree, and a last-ulp difference can
+    flip a flow sitting exactly on a learned threshold; chaining the
+    adds pins the order for every (B, W, k) shape, so training-time
+    features and runtime registers agree bit-exactly.
+    """
+    W = x.shape[1]
+    if W <= _UNROLL_W:          # trace-time unroll: W-1 chained adds
+        acc = x[:, 0]
+        for w in range(1, W):
+            acc = acc + x[:, w]
+        return acc
+    return jax.lax.fori_loop(    # same left-to-right order, rolled
+        1, W, lambda w, acc: acc + x[:, w], x[:, 0])
+
 
 def _pred_mask(pkts: jnp.ndarray, pred: jnp.ndarray) -> jnp.ndarray:
     """pkts (B, W, F), pred (B, k) codes -> (B, W, k) bool."""
@@ -54,9 +77,9 @@ def feature_window_ref(
     val = _field_vals(pkts, slot_field)                      # (B, W, k)
     mf = mask.astype(jnp.float32)
 
-    count = mf.sum(axis=1)
-    total = (val * mf).sum(axis=1)
-    sumsq = (val * val * mf).sum(axis=1)
+    count = ordered_wsum(mf)
+    total = ordered_wsum(val * mf)
+    sumsq = ordered_wsum(val * val * mf)
     mx = jnp.where(mask, val, -jnp.inf).max(axis=1)
     mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
     mn = jnp.where(mask, val, jnp.inf).min(axis=1)

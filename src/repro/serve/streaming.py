@@ -1,15 +1,20 @@
-"""Streaming batch scheduler for the fused partitioned-DT engine.
+"""Streaming batch scheduler for the partitioned-DT walk backends.
 
 The data-plane story (DESIGN.md §4) is millions of concurrent flows over
 a FIXED register pool; the TPU serving analogue is an unbounded flow
 stream over a FIXED device batch.  This module chunks arbitrarily large
 flow batches into fixed-size micro-batches, pads the ragged tail with
 invalid packets (valid = 0 — the same padding the windowing pipeline
-emits), and pushes each chunk through the fused, fully-jitted partition
-walk:
+emits), and pushes each chunk through a fully-jitted partition walk:
 
   * every micro-batch has the SAME shape, so XLA compiles the walk
     exactly once and replays it per chunk;
+  * any walk backend works (``impl="fused"`` or ``"pallas"`` — the
+    in-jit SID dispatch keeps the Pallas path streamable; ``"looped"``
+    is rejected because it syncs per partition);
+  * with a ``mesh``, each micro-batch fans out across the mesh's
+    data-parallel axes via ``shard_map`` — the walk is per-flow, so no
+    collectives are needed and scaling is embarrassingly parallel;
   * off-CPU the packet buffer is donated, so back-to-back chunks reuse
     one device allocation instead of growing the live set;
   * results land in preallocated host arrays — one device→host
@@ -22,25 +27,73 @@ workload.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Iterable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.core.inference import (
     Engine,
     EngineResult,
-    fused_partition_walk,
-    fused_partition_walk_donated,
+    ExecutionBackend,
+    StepFn,
+    _partition_walk,
+    get_backend,
+    partition_walk,
+    partition_walk_donated,
 )
+from repro.distributed.sharding import flow_batch_devices, flow_batch_spec
+from repro.kernels.dispatch import pad_axis0, round_up
 
 
 def _should_donate(donate: bool | None) -> bool:
     if donate is None:
         return jax.default_backend() != "cpu"
     return donate
+
+
+def _walk_backend(engine: Engine, impl: str | None) -> ExecutionBackend:
+    backend = get_backend(impl or engine.impl)
+    if backend.step is None:
+        raise ValueError(
+            f"streaming requires a jitted walk backend (fused or pallas); "
+            f"impl={backend.name!r} syncs the host every partition")
+    return backend
+
+
+def _single_device_walk(n_subtrees: int, donate: bool, step: StepFn):
+    """(batch, dev) -> (labels, recircs, exit_partition).  No caching
+    needed: partition_walk is already jitted at module level, and its
+    compile cache keys on the same static (n_subtrees, step) args."""
+    walk = partition_walk_donated if donate else partition_walk
+    return lambda batch, dev: walk(batch, dev, n_subtrees=n_subtrees,
+                                   with_trace=False, step=step)[:3]
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_walk(mesh, n_subtrees: int, donate: bool, step: StepFn):
+    """shard_map'd walk: the flow axis splits over the mesh's
+    data-parallel axes; the device tables replicate.  The walk carries
+    no cross-flow state, so the body needs no collectives."""
+    spec = flow_batch_spec(mesh)
+
+    def body(batch, dev):
+        labels, recircs, exit_p, _ = _partition_walk(
+            batch, dev, n_subtrees=n_subtrees, with_trace=False, step=step)
+        return labels, recircs, exit_p
+
+    # check_rep=False: the body is collective-free by construction, and
+    # pallas_call (the pallas backend's step) has no replication rule
+    sharded = shard_map(body, mesh=mesh,
+                        in_specs=(spec, PartitionSpec()),
+                        out_specs=(spec, spec, spec),
+                        check_rep=False)
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())
 
 
 def microbatches(n: int, micro_batch: int) -> Iterator[tuple[int, int]]:
@@ -57,48 +110,69 @@ def run_streaming(
     *,
     micro_batch: int = 4096,
     donate: bool | None = None,
+    mesh=None,
+    impl: str | None = None,
+    inflight: int = 2,
 ) -> EngineResult:
-    """Fused inference over a batch larger than one device batch.
+    """Streaming inference over a batch larger than one device batch.
 
     Equivalent to ``engine.run(win_pkts, with_trace=False)`` for any
-    ``B`` and ``micro_batch`` (property-tested, including the padded
-    ragged tail); memory high-water is one micro-batch, not ``B``.
+    ``B``, ``micro_batch``, backend, mesh, and pipelining depth
+    (property-tested, including the padded ragged tail); memory
+    high-water is ``inflight`` micro-batches, not ``B``.  With ``mesh``
+    the micro-batch is rounded up to a multiple of the mesh's
+    data-parallel device count and each chunk executes sharded over the
+    flow axis.
+
+    ``inflight`` chunks are dispatched before the first result is
+    pulled, so host staging of chunk i+1 overlaps device compute of
+    chunk i (jax dispatch is async); ``inflight=1`` restores the fully
+    synchronous PR 1 behaviour.
     """
-    if engine.impl == "pallas":
-        raise ValueError(
-            "run_streaming always executes the fused jnp walk; the Pallas "
-            "dt_traverse groups flows by SID on the host and cannot be "
-            "jitted into it — use Engine.run_looped for impl='pallas'")
+    backend = _walk_backend(engine, impl)
     P = engine._check_windows(win_pkts)
     B = win_pkts.shape[0]
-    walk = (fused_partition_walk_donated if _should_donate(donate)
-            else fused_partition_walk)
+    # micro_batch <= 0 is rejected by microbatches() below
+    if inflight <= 0:
+        raise ValueError("inflight must be positive")
+    mb = micro_batch
+    if mesh is not None:
+        mb = round_up(mb, flow_batch_devices(mesh))
+        walk = _sharded_walk(mesh, engine.ret.n_subtrees,
+                             _should_donate(donate), backend.step)
+    else:
+        walk = _single_device_walk(engine.ret.n_subtrees,
+                                   _should_donate(donate), backend.step)
 
     labels = np.zeros(B, dtype=np.int32)
     recircs = np.zeros(B, dtype=np.int32)
     exit_partition = np.zeros(B, dtype=np.int32)
-    # every chunk has the SAME (micro_batch, P, W, F) shape — even when
-    # B < micro_batch — so XLA compiles the walk once for the whole
-    # stream, whatever batch sizes the producer emits
-    mb = micro_batch
-    chunk = None                     # staging buffer, tail chunk only
+    pending: list[tuple[int, int, tuple]] = []
+
+    def collect(keep: int) -> None:
+        while len(pending) > keep:
+            lo, hi, fut = pending.pop(0)
+            lab, rec, exi = jax.device_get(fut)
+            labels[lo:hi] = lab[:hi - lo]
+            recircs[lo:hi] = rec[:hi - lo]
+            exit_partition[lo:hi] = exi[:hi - lo]
+
+    # every chunk has the SAME (mb, P, W, F) shape — even when B < mb —
+    # so XLA compiles the walk once for the whole stream, whatever batch
+    # sizes the producer emits
     for lo, hi in microbatches(B, mb):
         m = hi - lo
         if m == mb:
             # full chunk: upload straight from the caller's tensor
             batch = jnp.asarray(win_pkts[lo:hi, :P], dtype=jnp.float32)
         else:
-            if chunk is None:
-                chunk = np.zeros((mb, P) + win_pkts.shape[2:4], np.float32)
-            chunk[:m] = win_pkts[lo:hi, :P]
-            chunk[m:] = 0.0          # padded flows: every packet invalid
-            batch = jnp.asarray(chunk)
-        lab, rec, exi, _ = jax.device_get(walk(
-            batch, engine.dev,
-            n_subtrees=engine.ret.n_subtrees, with_trace=False))
-        labels[lo:hi] = lab[:m]
-        recircs[lo:hi] = rec[:m]
-        exit_partition[lo:hi] = exi[:m]
+            # ragged tail: pad with invalid packets (all-zero rows)
+            batch = jnp.asarray(pad_axis0(
+                np.ascontiguousarray(win_pkts[lo:hi, :P], dtype=np.float32),
+                mb))
+        pending.append((lo, hi, walk(batch, engine.dev)))
+        collect(inflight - 1)
+    collect(0)
     return EngineResult(labels, recircs, exit_partition, [])
 
 
@@ -108,6 +182,9 @@ def stream_batches(
     *,
     micro_batch: int = 4096,
     donate: bool | None = None,
+    mesh=None,
+    impl: str | None = None,
+    inflight: int = 2,
 ) -> Iterator[EngineResult]:
     """Open-stream form: one :class:`EngineResult` per incoming batch.
 
@@ -117,4 +194,5 @@ def stream_batches(
     """
     for batch in batches:
         yield run_streaming(engine, batch, micro_batch=micro_batch,
-                            donate=donate)
+                            donate=donate, mesh=mesh, impl=impl,
+                            inflight=inflight)

@@ -1,0 +1,150 @@
+"""The ExecutionBackend layer: every backend (looped / fused / pallas)
+is the same machine — identical EngineResult bit-for-bit — and the
+walk backends (fused, pallas with its in-jit SID dispatch) cross the
+device->host boundary exactly once per batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.inference import (
+    FUSED_BACKEND,
+    LOOPED_BACKEND,
+    PALLAS_BACKEND,
+    Engine,
+    get_backend,
+)
+from repro.core.partition import train_partitioned_dt
+from repro.flows.synthetic import make_dataset
+from repro.flows.windows import window_features, window_packets
+from repro.kernels.dispatch import capacity_blocks, sid_dispatch
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+
+# ---------------------------------------------------------------------------
+# selection matrix
+# ---------------------------------------------------------------------------
+def test_backend_selection_matrix():
+    assert get_backend("fused") is FUSED_BACKEND
+    assert get_backend("ref") is FUSED_BACKEND          # ref == fused walk
+    assert get_backend("pallas") is PALLAS_BACKEND
+    assert get_backend("looped") is LOOPED_BACKEND
+    # auto: pallas on TPU, fused elsewhere
+    expected = PALLAS_BACKEND if jax.default_backend() == "tpu" \
+        else FUSED_BACKEND
+    assert get_backend("auto") is expected
+    assert get_backend() is expected
+    with pytest.raises(ValueError, match="unknown impl"):
+        get_backend("tofino")
+
+
+def test_walk_backends_expose_steps():
+    assert FUSED_BACKEND.step is not None
+    assert PALLAS_BACKEND.step is not None
+    assert LOOPED_BACKEND.step is None      # not streamable
+
+
+# ---------------------------------------------------------------------------
+# in-jit SID dispatch (the grouping that used to live on the host)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,B,bb", [(1, 5, 4), (3, 50, 8), (16, 300, 64),
+                                    (7, 128, 128)])
+def test_sid_dispatch_routing(S, B, bb):
+    """dest is an injective block-aligned layout: every flow lands in a
+    block whose block_sid equals the flow's SID."""
+    rng = np.random.default_rng(S * 1000 + B)
+    sid = jnp.asarray(rng.integers(0, S, B), jnp.int32)
+    d = jax.jit(sid_dispatch, static_argnames=("n_subtrees", "block_b"))(
+        sid, n_subtrees=S, block_b=bb)
+    nb = capacity_blocks(B, S, bb)
+    order, dest, block_sid = map(np.asarray, d)
+    assert sorted(order) == list(range(B))              # a permutation
+    assert len(set(dest.tolist())) == B                 # injective
+    assert dest.min() >= 0 and dest.max() < nb * bb
+    assert block_sid.shape == (nb,)
+    np.testing.assert_array_equal(block_sid[dest // bb],
+                                  np.asarray(sid)[order])
+
+
+def test_sid_dispatch_has_no_host_callbacks():
+    """The grouping must trace into pure XLA — no callbacks, no numpy."""
+    sid = jnp.zeros(64, jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda s: sid_dispatch(s, n_subtrees=4, block_b=32))(sid)
+    assert "callback" not in str(jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def backend_setup(trained_pdt):
+    pdt, Xw, tr = trained_pdt
+    wp = window_packets(tr, 3)
+    eng = Engine.from_model(pdt)
+    return pdt, Xw, wp, eng
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.recircs, b.recircs)
+    np.testing.assert_array_equal(a.exit_partition, b.exit_partition)
+
+
+def test_pallas_backend_identical_to_fused_and_looped(backend_setup):
+    """The acceptance bar: impl='pallas' (interpret on CPU) produces
+    labels identical to fused and looped — same trees, same windows,
+    zero tolerance."""
+    pdt, Xw, wp, eng = backend_setup
+    fused = eng.run(wp, with_trace=True, impl="fused")
+    pallas = eng.run(wp, with_trace=True, impl="pallas")
+    looped = eng.run_looped(wp)
+    _assert_identical(pallas, fused)
+    _assert_identical(pallas, looped)
+    # register traces agree bit-exactly too (canonical reduction order)
+    assert len(pallas.regs_trace) == len(fused.regs_trace)
+    for a, b in zip(pallas.regs_trace, fused.regs_trace):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_backend_matches_oracle_exactly(backend_setup):
+    pdt, Xw, wp, eng = backend_setup
+    labels, recircs, exit_p = pdt.predict(Xw, return_trace=True)
+    res = eng.run(wp, with_trace=False, impl="pallas")
+    np.testing.assert_array_equal(res.labels, labels)
+    np.testing.assert_array_equal(res.recircs, recircs)
+    np.testing.assert_array_equal(res.exit_partition, exit_p)
+
+
+def test_pallas_single_device_round_trip(backend_setup, monkeypatch):
+    """No host-side SID grouping between recirculation hops: the pallas
+    walk crosses the device->host boundary exactly once per batch."""
+    import repro.core.inference as inf
+    pdt, Xw, wp, eng = backend_setup
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(inf.jax, "device_get",
+                        lambda tree: calls.append(1) or real(tree))
+    eng.run(wp, with_trace=False, impl="pallas")
+    assert len(calls) == 1
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_backend_equivalence_property_random_trees(seed):
+    """Property over random datasets / tree shapes: all three backends
+    emit bit-identical verdicts."""
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 4))
+    sizes = [int(rng.integers(1, 4)) for _ in range(p)]
+    k = int(rng.integers(2, 5))
+    ds = make_dataset("d2", n_flows=200, seed=seed)
+    Xw = window_features(ds, p)
+    pdt = train_partitioned_dt(Xw, ds.labels, partition_sizes=sizes, k=k)
+    wp = window_packets(ds, p)
+    eng = Engine.from_model(pdt)
+    fused = eng.run(wp, with_trace=False, impl="fused")
+    pallas = eng.run(wp, with_trace=False, impl="pallas")
+    looped = eng.run_looped(wp, with_trace=False)
+    _assert_identical(pallas, fused)
+    _assert_identical(pallas, looped)

@@ -81,3 +81,30 @@ def test_streaming_donate_flag_explicit(stream_setup):
     eng, wp, full, _ = stream_setup
     res = run_streaming(eng, wp, micro_batch=33, donate=False)
     _assert_same(res, full)
+
+
+@pytest.mark.parametrize("inflight", [1, 3, 8])
+def test_streaming_pipelining_depth(stream_setup, inflight):
+    """Async in-flight dispatch (any depth) must not change verdicts —
+    chunks complete out of the host loop but land in the right rows."""
+    eng, wp, full, _ = stream_setup
+    res = run_streaming(eng, wp, micro_batch=40, inflight=inflight)
+    _assert_same(res, full)
+    with pytest.raises(ValueError):
+        run_streaming(eng, wp, inflight=0)
+
+
+def test_streaming_pallas_backend(stream_setup):
+    """The in-jit SID dispatch makes the Pallas walk streamable (the
+    host-grouped PR 1 path had to reject this); verdicts identical."""
+    eng, wp, full, _ = stream_setup
+    res = run_streaming(eng, wp[:96], micro_batch=32, impl="pallas")
+    np.testing.assert_array_equal(res.labels, full.labels[:96])
+    np.testing.assert_array_equal(res.recircs, full.recircs[:96])
+    np.testing.assert_array_equal(res.exit_partition, full.exit_partition[:96])
+
+
+def test_streaming_rejects_looped_backend(stream_setup):
+    eng, wp, _, _ = stream_setup
+    with pytest.raises(ValueError, match="walk backend"):
+        run_streaming(eng, wp, impl="looped")
