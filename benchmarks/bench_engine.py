@@ -11,8 +11,16 @@ Rows (flows/sec):
   * ``engine/streaming_sharded``  — same, shard_map'd over all devices
                                     (emitted when >1 device is visible,
                                     e.g. XLA_FLAGS=--xla_force_host_
-                                    platform_device_count=8)
+                                    platform_device_count=8; on a
+                                    single-device mesh the speedup
+                                    fields are null — a speedup vs
+                                    itself is meaningless)
   * ``engine/fused@B=...``        — batch-size sweep of the fused walk
+  * ``engine/compact/<profile>/<backend>`` — early-exit compaction
+    (``compact=True``) vs the dense walk, on the three exit-rate
+    profile workloads (front / uniform / back-loaded; see
+    ``flows.synthetic.make_profile_dataset``); ``speedup_vs_dense`` and
+    the realised per-partition ``exit_frac`` land in the JSON
 
 Besides the CSV rows, results are dumped to ``BENCH_engine.json``
 (override with the BENCH_ENGINE_JSON env var) so the perf trajectory is
@@ -32,8 +40,11 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Row, dataset, splidt_model, timed
+from benchmarks.common import (
+    Row, dataset, profile_dataset, profile_model, splidt_model, timed,
+)
 from repro.core.inference import Engine
+from repro.flows.synthetic import EXIT_PROFILES
 from repro.flows.windows import window_packets
 from repro.serve.streaming import run_streaming
 
@@ -117,29 +128,36 @@ def run(quick: bool = True, smoke: bool = False):
         lambda: run_streaming(eng, wp, micro_batch=mb), repeat=repeat)
     add("engine/streaming", us_stream, B, micro_batch=mb)
 
-    if len(jax.devices()) > 1:
-        from repro.launch.mesh import make_flow_mesh
-        mesh = make_flow_mesh()
-        # the sharded path prefers a larger micro-batch (each chunk
-        # splits n_devices ways, so per-device slices stay cache-resident
-        # where a single device's working set would spill); measure the
-        # single-device baseline at BOTH sizes and report the speedup
-        # against the best single-device config, so the tracked metric
-        # can't flatter sharding by picking a degraded baseline
-        mb_s = mb if smoke else 8192
-        us_base = us_stream
-        if mb_s != mb:
-            _, us_base = timed(
-                lambda: run_streaming(eng, wp, micro_batch=mb_s),
-                repeat=repeat)
-            add(f"engine/streaming@mb={mb_s}", us_base, B, micro_batch=mb_s)
-        _, us_shard = timed(
-            lambda: run_streaming(eng, wp, micro_batch=mb_s, mesh=mesh),
+    from repro.distributed.sharding import flow_batch_devices
+    from repro.launch.mesh import make_flow_mesh
+    mesh = make_flow_mesh()
+    n_mesh = flow_batch_devices(mesh)
+    # the sharded path prefers a larger micro-batch (each chunk
+    # splits n_devices ways, so per-device slices stay cache-resident
+    # where a single device's working set would spill); measure the
+    # single-device baseline at BOTH sizes and report the speedup
+    # against the best single-device config, so the tracked metric
+    # can't flatter sharding by picking a degraded baseline
+    mb_s = mb if smoke else 8192
+    us_base = us_stream
+    if mb_s != mb:
+        _, us_base = timed(
+            lambda: run_streaming(eng, wp, micro_batch=mb_s),
             repeat=repeat)
-        add("engine/streaming_sharded", us_shard, B, micro_batch=mb_s,
-            n_devices=len(jax.devices()),
-            speedup_vs_single=round(min(us_stream, us_base) / us_shard, 2),
-            speedup_vs_single_same_mb=round(us_base / us_shard, 2))
+        add(f"engine/streaming@mb={mb_s}", us_base, B, micro_batch=mb_s)
+    _, us_shard = timed(
+        lambda: run_streaming(eng, wp, micro_batch=mb_s, mesh=mesh),
+        repeat=repeat)
+    # a 1-device mesh shards against itself: the "speedup" would be pure
+    # timer noise around 1.0, so record null rather than a number
+    # downstream dashboards would read as signal
+    add("engine/streaming_sharded", us_shard, B, micro_batch=mb_s,
+        n_devices=n_mesh,
+        speedup_vs_single=(
+            None if n_mesh < 2
+            else round(min(us_stream, us_base) / us_shard, 2)),
+        speedup_vs_single_same_mb=(
+            None if n_mesh < 2 else round(us_base / us_shard, 2)))
 
     # batch sweep: how the fused walk's flows/sec scales with B
     sweep = [256] if smoke else ([1_000, 10_000] if quick
@@ -148,6 +166,58 @@ def run(quick: bool = True, smoke: bool = False):
         wps = wp[:Bs] if Bs <= B else _tiled_windows(te, p, Bs)
         _, us = timed(lambda: eng.run(wps, with_trace=False), repeat=repeat)
         add(f"engine/fused@B={Bs}", us, Bs)
+
+    # ------------------------------------------------------------------
+    # early-exit compaction: exit-rate profile x walk backend
+    # ------------------------------------------------------------------
+    # Compaction's payoff is entirely a function of WHEN flows exit, so
+    # it is measured on the three profile workloads rather than the d2
+    # model above (whose exits cluster in the later partitions).  The
+    # dense (compact=False) run of the SAME model/windows is the
+    # baseline; `exit_frac` records the realised per-partition exit
+    # rates so the speedup can be read against the workload shape.
+    # Caveat (see module docstring on pallas): off-TPU the pallas rows
+    # run in interpret mode — smoke-signal only.
+    n_prof = 400 if smoke else 2500
+    Bc = 256 if smoke else (20_000 if quick else 50_000)
+    Bcp = 256 if smoke else 1024          # pallas interpret-mode cap
+    for profile in EXIT_PROFILES:
+        pdt_c = profile_model(profile, n_prof)
+        _, te_c = profile_dataset(profile, n_prof).split()
+        wp_c = _tiled_windows(te_c, 3, Bc)
+        eng_c = Engine.from_model(pdt_c, impl="ref")
+        dense, us_dense = timed(lambda: eng_c.run(wp_c, with_trace=False),
+                                repeat=repeat)
+        exit_frac = [round(float(np.mean(dense.exit_partition == q)), 3)
+                     for q in range(pdt_c.n_partitions)]
+        add(f"engine/compact/{profile}/dense", us_dense, Bc,
+            exit_frac=exit_frac)
+        _, us_comp = timed(
+            lambda: eng_c.run(wp_c, with_trace=False, compact=True),
+            repeat=repeat)
+        add(f"engine/compact/{profile}/fused", us_comp, Bc,
+            exit_frac=exit_frac,
+            speedup_vs_dense=round(us_dense / us_comp, 2))
+        # pallas rows run a smaller slice (interpret-mode compile cost),
+        # so their exit_frac is recomputed on that slice; the dense
+        # pallas baseline is emitted too, otherwise the tracked speedup
+        # ratio could stay flat while both sides regress
+        wp_cp = wp_c[:Bcp]
+        interp = int(jax.default_backend() != "tpu")
+        pd_res, us_pd = timed(
+            lambda: eng_c.run(wp_cp, with_trace=False, impl="pallas"),
+            repeat=repeat)
+        exit_frac_p = [round(float(np.mean(pd_res.exit_partition == q)), 3)
+                       for q in range(pdt_c.n_partitions)]
+        add(f"engine/compact/{profile}/pallas_dense", us_pd, Bcp,
+            exit_frac=exit_frac_p, interpret=interp)
+        _, us_pc = timed(
+            lambda: eng_c.run(wp_cp, with_trace=False, impl="pallas",
+                              compact=True),
+            repeat=repeat)
+        add(f"engine/compact/{profile}/pallas", us_pc, Bcp,
+            exit_frac=exit_frac_p, interpret=interp,
+            speedup_vs_dense=round(us_pd / us_pc, 2))
 
     path = _write_json(results, "smoke" if smoke else
                        ("quick" if quick else "full"))

@@ -42,6 +42,25 @@ def windowed(name: str, p: int, n_flows: int = 2500):
 
 
 @functools.lru_cache(maxsize=None)
+def profile_dataset(profile: str, n_flows: int = 2500):
+    """Exit-rate profile workload (front / uniform / back-loaded)."""
+    from repro.flows.synthetic import make_profile_dataset
+    return make_profile_dataset(profile, n_flows=n_flows)
+
+
+@functools.lru_cache(maxsize=None)
+def profile_model(profile: str, n_flows: int = 2500,
+                  ps: tuple = (3, 3, 3), k: int = 4):
+    from repro.core.partition import train_partitioned_dt
+    from repro.flows.windows import window_features
+    ds = profile_dataset(profile, n_flows)
+    tr, _ = ds.split()
+    Xw = window_features(tr, len(ps))
+    return train_partitioned_dt(Xw, tr.labels, partition_sizes=list(ps),
+                                k=k, n_classes=ds.n_classes)
+
+
+@functools.lru_cache(maxsize=None)
 def splidt_model(name: str, ps: tuple, k: int, n_flows: int = 2500,
                  max_dep: int | None = None):
     from repro.core.partition import train_partitioned_dt

@@ -28,7 +28,17 @@ step function:
 All backends share :class:`EngineResult` semantics and must agree with
 :meth:`PartitionedDT.predict` (the offline numpy oracle) — and, since
 ``kernels.ref.ordered_wsum`` pinned the reduction order, they agree
-bit-exactly; property tests enforce this for every backend.
+bit-exactly; property tests enforce this for every backend.  A flow
+that never takes an exit action reports ``-1`` sentinels (labels and
+exit partition) rather than masquerading as class 0 at partition 0;
+``EngineResult.n_unterminated`` counts them.
+
+Every backend also accepts ``compact=True``: early-exit compaction of
+the recirculation walk (``kernels.compaction``) — after each hop only
+the surviving flows are carried through feature-window rebuild +
+traversal, via static power-of-two capacity buckets in-jit (walk
+backends) or host fancy-indexing (looped).  Bit-identical to the dense
+walk; ``compact=False`` remains the reference path.
 
 Backend selection: ``Engine.run(win_pkts, impl=...)`` or the engine's
 ``impl=`` field; see :func:`get_backend` for the selection matrix.
@@ -36,7 +46,7 @@ Backend selection: ``Engine.run(win_pkts, impl=...)`` or the engine's
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Protocol, runtime_checkable
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -45,20 +55,72 @@ import numpy as np
 from repro.core.partition import PartitionedDT
 from repro.core.range_tables import RangeExecTables, pack_range_exec
 from repro.core.tables import PackedTables, pack_tables
-from repro.kernels import ops
+from repro.kernels import compaction, ops
 
 
 @dataclasses.dataclass
 class EngineResult:
-    labels: np.ndarray           # (B,) predicted class per flow
+    labels: np.ndarray           # (B,) predicted class per flow; -1 if the
+                                 #     flow never took an exit action
     recircs: np.ndarray          # (B,) partition transitions (control pkts)
-    exit_partition: np.ndarray   # (B,)
+    exit_partition: np.ndarray   # (B,) exit hop per flow; -1 sentinel as above
     regs_trace: list[np.ndarray] # per-partition register snapshots
 
+    @property
+    def n_unterminated(self) -> int:
+        """Flows that never took an exit action (``-1`` sentinels).
 
-# step: (pkts (B, W, F), sid (B,), dev) -> (regs (B, k), action (B,))
-StepFn = Callable[[jnp.ndarray, jnp.ndarray, ops.DeviceTables],
-                  tuple[jnp.ndarray, jnp.ndarray]]
+        Non-zero only for corrupt/truncated models (e.g. depth-truncated
+        DSE candidates whose final partition still routes to a SID) —
+        a trained :class:`PartitionedDT` exits every flow by the last
+        partition.  Surfaced so callers can distinguish "class 0 at
+        partition 0" from "the walk fell off the end".
+        """
+        return int(np.count_nonzero(np.asarray(self.exit_partition) < 0))
+
+
+# one partition stage (defined next to DeviceTables; re-exported here
+# because backends and the streaming scheduler type against it)
+StepFn = ops.StepFn
+
+
+def _walk_init(B: int) -> tuple[jnp.ndarray, ...]:
+    """Initial flow-walk carry: ``(sid, done, labels, recircs, exit_p)``.
+
+    ``labels`` / ``exit_partition`` start at the ``-1`` sentinel so a
+    flow that never takes an exit action (non-terminating: corrupt
+    tables, depth-truncated DSE candidates) is distinguishable from a
+    legitimate class-0 verdict at partition 0.
+    """
+    return (
+        jnp.zeros(B, jnp.int32),            # sid: all flows start at root
+        jnp.zeros(B, jnp.bool_),            # done
+        jnp.full(B, -1, jnp.int32),         # labels (sentinel)
+        jnp.zeros(B, jnp.int32),            # recircs
+        jnp.full(B, -1, jnp.int32),         # exit_partition (sentinel)
+    )
+
+
+def _hop_update(carry, p, action, S: int):
+    """Shared recirculation bookkeeping for one hop (dense or compacted).
+
+    ``action`` slots belonging to already-``done`` flows may carry any
+    value (the compacted step leaves ``-1`` there) — everything is
+    masked by ``active``.
+    """
+    sid, done, labels, recircs, exit_p = carry
+    is_exit = action >= S
+    active = ~done
+    exiting = active & is_exit
+    labels = jnp.where(exiting, action - S, labels)
+    exit_p = jnp.where(exiting, p, exit_p)
+    done = done | exiting
+    cont = active & ~is_exit
+    # recirculation: one control packet per transition, SID register
+    # update; feature registers are rebuilt from scratch next window
+    recircs = recircs + cont.astype(jnp.int32)
+    sid = jnp.where(cont, action, sid)
+    return sid, done, labels, recircs, exit_p
 
 
 def _partition_walk(
@@ -68,50 +130,81 @@ def _partition_walk(
     n_subtrees: int,
     with_trace: bool = False,
     step: StepFn = ops.fused_step,
+    compact: bool = False,
 ):
     """Device-resident partition walk: scan partitions, carry flow state.
 
     Returns ``(labels, recircs, exit_partition, regs)`` — all int32
     except ``regs`` (P, B, k) f32, which is ``None`` unless
     ``with_trace``.  Actions ``>= n_subtrees`` exit with class
-    ``action - n_subtrees``; smaller actions recirculate to that SID.
-    ``step`` is the backend's per-partition stage (dense jnp or Pallas
-    kernels); the walk itself is backend-agnostic.
+    ``action - n_subtrees``; smaller actions recirculate to that SID; a
+    flow still active after the last partition keeps the ``-1``
+    sentinels.  ``step`` is the backend's per-partition stage (dense jnp
+    or Pallas kernels); the walk itself is backend-agnostic.
+
+    With ``compact=True`` the walk early-exit-compacts between hops
+    (``kernels.compaction``): survivors are gathered into the smallest
+    power-of-two capacity bucket that fits them, the step runs on that
+    prefix only, and verdicts scatter back to the original flow slots.
+    Bit-identical to the dense walk; the register trace differs only in
+    that exited flows report zero registers for the hops they skipped.
     """
+    if compact:
+        return _compacted_walk(win_pkts, dev, n_subtrees=n_subtrees,
+                               with_trace=with_trace, step=step)
     B, P = win_pkts.shape[0], win_pkts.shape[1]
     S = n_subtrees
 
     def body(carry, xs):
-        sid, done, labels, recircs, exit_p = carry
         p, pkts = xs
-        regs, action = step(pkts, sid, dev)
-        is_exit = action >= S
-        active = ~done
-        exiting = active & is_exit
-        labels = jnp.where(exiting, action - S, labels)
-        exit_p = jnp.where(exiting, p, exit_p)
-        done = done | exiting
-        cont = active & ~is_exit
-        # recirculation: one control packet per transition, SID register
-        # update; feature registers are rebuilt from scratch next window
-        recircs = recircs + cont.astype(jnp.int32)
-        sid = jnp.where(cont, action, sid)
-        return (sid, done, labels, recircs, exit_p), (
+        regs, action = step(pkts, carry[0], dev)
+        return _hop_update(carry, p, action, S), (
             regs if with_trace else None)
 
-    init = (
-        jnp.zeros(B, jnp.int32),            # sid: all flows start at root
-        jnp.zeros(B, jnp.bool_),            # done
-        jnp.zeros(B, jnp.int32),            # labels
-        jnp.zeros(B, jnp.int32),            # recircs
-        jnp.zeros(B, jnp.int32),            # exit_partition
-    )
     xs = (jnp.arange(P, dtype=jnp.int32), jnp.swapaxes(win_pkts, 0, 1))
-    (sid, done, labels, recircs, exit_p), regs = jax.lax.scan(body, init, xs)
+    (sid, done, labels, recircs, exit_p), regs = jax.lax.scan(
+        body, _walk_init(B), xs)
     return labels, recircs, exit_p, regs
 
 
-_WALK_STATIC = ("n_subtrees", "with_trace", "step")
+def _compacted_walk(
+    win_pkts: jnp.ndarray,       # (B, P, W, PKT_NFIELDS)
+    dev: ops.DeviceTables,
+    *,
+    n_subtrees: int,
+    with_trace: bool,
+    step: StepFn,
+):
+    """Early-exit-compacted walk: unrolled hops, shrinking active buffer.
+
+    Hop 0 runs dense (every flow is active at the root); each later hop
+    runs the step only on the compacted survivor prefix, in the smallest
+    capacity bucket that fits (``lax.switch`` over a static power-of-two
+    ladder — see ``kernels.compaction``).  Unrolled rather than scanned
+    because the per-hop buffer capacity is data-dependent; P is small
+    (2-4 partitions), so the trace stays cheap.
+    """
+    B, P = win_pkts.shape[0], win_pkts.shape[1]
+    caps = compaction.bucket_caps(B)
+    carry = _walk_init(B)
+    trace = []
+    for p in range(P):
+        pkts = win_pkts[:, p]
+        if p == 0:
+            regs, action = step(pkts, carry[0], dev)
+        else:
+            regs, action = compaction.compacted_step(
+                pkts, carry[0], carry[1], dev, step=step, caps=caps,
+                with_regs=with_trace)
+        carry = _hop_update(carry, p, action, n_subtrees)
+        if with_trace:
+            trace.append(regs)
+    _, _, labels, recircs, exit_p = carry
+    return labels, recircs, exit_p, (jnp.stack(trace) if with_trace
+                                     else None)
+
+
+_WALK_STATIC = ("n_subtrees", "with_trace", "step", "compact")
 
 partition_walk = jax.jit(_partition_walk, static_argnames=_WALK_STATIC)
 
@@ -146,7 +239,8 @@ class ExecutionBackend(Protocol):
     step: StepFn | None
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True) -> EngineResult: ...
+            with_trace: bool = True, compact: bool = False
+            ) -> EngineResult: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,12 +255,12 @@ class WalkBackend:
     step: StepFn
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True) -> EngineResult:
+            with_trace: bool = True, compact: bool = False) -> EngineResult:
         P = engine._check_windows(win_pkts)
         labels, recircs, exit_p, regs = partition_walk(
             jnp.asarray(win_pkts[:, :P]), engine.dev,
             n_subtrees=engine.ret.n_subtrees, with_trace=with_trace,
-            step=self.step)
+            step=self.step, compact=compact)
         # ONE device->host transfer for the whole batch
         labels, recircs, exit_p, regs = jax.device_get(
             (labels, recircs, exit_p, regs))
@@ -193,27 +287,54 @@ class LoopedBackend:
         return "ref"
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True) -> EngineResult:
+            with_trace: bool = True, compact: bool = False) -> EngineResult:
         B = win_pkts.shape[0]
-        engine._check_windows(win_pkts)
+        P = engine._check_windows(win_pkts)
         impl = self._op_impl(engine.impl)
         S = engine.ret.n_subtrees
-        sid = jnp.zeros(B, jnp.int32)
+        k = engine.ret.k
+        # the loop's carry lives on the HOST: one upload (sid + packets)
+        # and one fetch (regs + action, or action alone) per hop — the
+        # per-partition np.asarray/jnp.asarray ping-pong that used to mix
+        # numpy and jnp mask arithmetic is gone
+        sid = np.zeros(B, dtype=np.int32)
         done = np.zeros(B, dtype=bool)
         # int32 to match the walk backends: verdicts from any backend
-        # concatenate without silent upcasts
-        labels = np.zeros(B, dtype=np.int32)
+        # concatenate without silent upcasts; -1 sentinels as in the walk
+        labels = np.full(B, -1, dtype=np.int32)
         recircs = np.zeros(B, dtype=np.int32)
-        exit_partition = np.zeros(B, dtype=np.int32)
+        exit_partition = np.full(B, -1, dtype=np.int32)
         regs_trace: list[np.ndarray] = []
 
-        for p in range(engine.tables.n_partitions):
-            pkts = jnp.asarray(win_pkts[:, p])
-            regs = ops.feature_window(pkts, sid, engine.tables, impl=impl)
+        for p in range(P):
+            # host-side early-exit compaction: the looped analogue of the
+            # walk backends' capacity buckets is plain fancy indexing
+            rows = np.nonzero(~done)[0] if compact and p else np.arange(B)
+            if rows.size:
+                dense = rows.size == B
+                pkts = jnp.asarray(win_pkts[:, p] if dense
+                                   else win_pkts[rows, p])
+                sid_d = jnp.asarray(sid[rows])
+                regs_d = ops.feature_window(pkts, sid_d, engine.tables,
+                                            impl=impl)
+                action_d = ops.dt_traverse(regs_d, sid_d, engine.ret,
+                                           impl=impl)
+                if with_trace:
+                    regs_h, action_h = jax.device_get((regs_d, action_d))
+                else:
+                    action_h = jax.device_get(action_d)
             if with_trace:
-                regs_trace.append(np.asarray(regs))
-            action = np.asarray(ops.dt_traverse(regs, sid, engine.ret,
-                                                impl=impl))
+                if B and rows.size == B:
+                    regs_trace.append(regs_h)
+                else:
+                    full = np.zeros((B, k), dtype=np.float32)
+                    if rows.size:
+                        full[rows] = regs_h
+                    regs_trace.append(full)
+            if not rows.size:
+                continue
+            action = np.full(B, -1, dtype=np.int32)
+            action[rows] = action_h
             is_exit = action >= S
             active = ~done
             exiting = active & is_exit
@@ -223,7 +344,7 @@ class LoopedBackend:
             cont = active & ~is_exit
             recircs[cont] += 1           # one control packet per transition
             # "recirculation": update SID register, reset feature registers
-            sid = jnp.where(jnp.asarray(cont), jnp.asarray(action), sid)
+            sid = np.where(cont, action, sid).astype(np.int32)
         return EngineResult(labels, recircs, exit_partition, regs_trace)
 
 
@@ -292,16 +413,18 @@ class Engine:
     # unified entry point
     # ------------------------------------------------------------------
     def run(self, win_pkts: np.ndarray, *, with_trace: bool = True,
-            impl: str | None = None) -> EngineResult:
+            impl: str | None = None, compact: bool = False) -> EngineResult:
         """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``.
 
         Dispatches to :func:`get_backend` (``impl`` overrides the
         engine's default).  Walk backends (fused / pallas) run the
         fully-jitted scan with a single device→host transfer per batch;
-        ``looped`` syncs per partition.
+        ``looped`` syncs per partition.  ``compact=True`` enables
+        early-exit compaction between hops (identical verdicts; the
+        dense ``compact=False`` path remains the reference).
         """
         return get_backend(impl or self.impl).run(
-            self, win_pkts, with_trace=with_trace)
+            self, win_pkts, with_trace=with_trace, compact=compact)
 
     # ------------------------------------------------------------------
     # streaming path (batches far beyond one device batch)
@@ -311,19 +434,22 @@ class Engine:
                       donate: bool | None = None,
                       mesh=None,
                       impl: str | None = None,
-                      inflight: int = 2) -> EngineResult:
+                      inflight: int = 2,
+                      compact: bool = False) -> EngineResult:
         """Chunk ``win_pkts`` into fixed-size padded micro-batches and
         run each through a walk backend; with ``mesh`` the micro-batch
         fans out across the mesh's flow-batch axis via ``shard_map``.
+        ``compact=True`` early-exit-compacts each chunk's walk.
         See ``repro.serve.streaming``."""
         from repro.serve.streaming import run_streaming
         return run_streaming(self, win_pkts, micro_batch=micro_batch,
                              donate=donate, mesh=mesh, impl=impl,
-                             inflight=inflight)
+                             inflight=inflight, compact=compact)
 
     # ------------------------------------------------------------------
     # looped path (per-partition host sync; per-op dispatch + baseline)
     # ------------------------------------------------------------------
-    def run_looped(self, win_pkts: np.ndarray, *,
-                   with_trace: bool = True) -> EngineResult:
-        return LOOPED_BACKEND.run(self, win_pkts, with_trace=with_trace)
+    def run_looped(self, win_pkts: np.ndarray, *, with_trace: bool = True,
+                   compact: bool = False) -> EngineResult:
+        return LOOPED_BACKEND.run(self, win_pkts, with_trace=with_trace,
+                                  compact=compact)

@@ -123,13 +123,14 @@ class PartitionedDT:
                 cont = rows[~exiting]
                 sid[cont] = nxt[~exiting]
                 recircs[cont] += 1                    # one control packet
-        # anything not done after the last partition should not happen, but
-        # guard by labelling with the current subtree's majority class
+        # a flow still active after the last partition never took an exit
+        # action (possible only for corrupt/truncated models — training
+        # exits every leaf of the final partition).  Report the same -1
+        # sentinels as the engine backends: a silent majority-class (or
+        # class-0) verdict here is indistinguishable from a real exit.
         if not done.all():
-            for i in np.nonzero(~done)[0]:
-                st = self.subtrees[int(sid[i])]
-                label[i] = int(st.tree.value[0].argmax())
-                exit_partition[i] = self.n_partitions - 1
+            label[~done] = -1
+            exit_partition[~done] = -1
         if return_trace:
             return label, recircs, exit_partition
         return label

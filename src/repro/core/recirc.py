@@ -86,6 +86,12 @@ def time_to_detection(
     n = lengths.shape[0]
     ttd = np.zeros(n, dtype=np.float64)
     for i in range(n):
+        if exit_partition[i] < 0:
+            # -1 sentinel: the flow never took an exit action, so it has
+            # no detection time — NaN, not the last window's end (Python
+            # negative indexing would silently report a plausible TTD)
+            ttd[i] = np.nan
+            continue
         L = int(lengths[i])
         bounds = window_bounds(L, n_partitions)
         _, hi = bounds[int(exit_partition[i])]

@@ -97,42 +97,19 @@ def _perturb(ph: _Phase, rng: np.random.Generator, n_deltas: int) -> _Phase:
 _DATASETS = {"d1": (19, 0xD1), "d2": (4, 0xD2), "d3": (13, 0xD3)}
 
 
-def make_dataset(
-    name: str,
-    n_flows: int = 6000,
-    *,
-    seed: int | None = None,
-    min_len: int = 12,
-    max_len: int = 192,
-) -> FlowDataset:
-    """Generate a labelled synthetic flow dataset.
+def _synth_packets(
+    profiles: list[list[_Phase]],
+    labels: np.ndarray,
+    lengths: np.ndarray,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Render per-class phase profiles into a padded packet tensor.
 
-    Half of each class's identity lives in later phases: classes are
-    grouped into "families" that share the early-phase profile and only
-    diverge mid/late flow, which is exactly the regime where windowed
-    partitioned inference has an edge over first-k-packets top-k models.
+    Consumes ``rng`` in flow-major, phase-minor order — the exact call
+    sequence :func:`make_dataset` always used, so extracting this helper
+    changes no existing dataset bit.
     """
-    if name not in _DATASETS:
-        raise ValueError(f"unknown dataset {name!r}; options {sorted(_DATASETS)}")
-    n_classes, ds_seed = _DATASETS[name]
-    rng = np.random.default_rng(ds_seed if seed is None else seed)
-
-    # class profiles: families share phase-0; members diverge in phases 1-2
-    n_families = max(2, n_classes // 3)
-    family_phase0 = [_base_phase(rng) for _ in range(n_families)]
-    profiles: list[list[_Phase]] = []
-    for c in range(n_classes):
-        fam = c % n_families
-        p0 = _perturb(family_phase0[fam], rng, n_deltas=1)   # nearly shared
-        p1 = _perturb(p0, rng, n_deltas=3)
-        p2 = _perturb(p1, rng, n_deltas=3)
-        profiles.append([p0, p1, p2])
-
-    labels = rng.integers(0, n_classes, size=n_flows)
-    lengths = np.clip(
-        np.exp(rng.normal(np.log(40.0), 0.7, size=n_flows)).astype(np.int64),
-        min_len, max_len,
-    ).astype(np.int32)
+    n_flows = int(labels.shape[0])
     max_l = int(lengths.max())
     pkts = np.zeros((n_flows, max_l, PKT_NFIELDS), dtype=np.float32)
 
@@ -171,5 +148,131 @@ def make_dataset(
             row[lo:hi, PKT_VALID] = 1.0
         # first packet of a flow always SYN-ish (handshake realism)
         row[0, PKT_FLAGS] = float(int(row[0, PKT_FLAGS]) | FLAG_SYN)
+    return pkts
 
+
+def make_dataset(
+    name: str,
+    n_flows: int = 6000,
+    *,
+    seed: int | None = None,
+    min_len: int = 12,
+    max_len: int = 192,
+) -> FlowDataset:
+    """Generate a labelled synthetic flow dataset.
+
+    Half of each class's identity lives in later phases: classes are
+    grouped into "families" that share the early-phase profile and only
+    diverge mid/late flow, which is exactly the regime where windowed
+    partitioned inference has an edge over first-k-packets top-k models.
+    """
+    if name not in _DATASETS:
+        raise ValueError(f"unknown dataset {name!r}; options {sorted(_DATASETS)}")
+    n_classes, ds_seed = _DATASETS[name]
+    rng = np.random.default_rng(ds_seed if seed is None else seed)
+
+    # class profiles: families share phase-0; members diverge in phases 1-2
+    n_families = max(2, n_classes // 3)
+    family_phase0 = [_base_phase(rng) for _ in range(n_families)]
+    profiles: list[list[_Phase]] = []
+    for c in range(n_classes):
+        fam = c % n_families
+        p0 = _perturb(family_phase0[fam], rng, n_deltas=1)   # nearly shared
+        p1 = _perturb(p0, rng, n_deltas=3)
+        p2 = _perturb(p1, rng, n_deltas=3)
+        profiles.append([p0, p1, p2])
+
+    labels = rng.integers(0, n_classes, size=n_flows)
+    lengths = np.clip(
+        np.exp(rng.normal(np.log(40.0), 0.7, size=n_flows)).astype(np.int64),
+        min_len, max_len,
+    ).astype(np.int32)
+    pkts = _synth_packets(profiles, labels, lengths, rng)
     return FlowDataset(pkts, lengths, labels.astype(np.int64), n_classes, name)
+
+
+# ---------------------------------------------------------------------------
+# exit-rate profile workloads (early-exit compaction's scenario axis)
+# ---------------------------------------------------------------------------
+EXIT_PROFILES = ("front", "uniform", "back")
+
+
+def _separated_phase(c: int, n_classes: int) -> _Phase:
+    """A strongly class-separated phase: disjoint behaviour parameters,
+    so a depth-few subtree isolates the class the first time it sees
+    this phase (pure leaves -> exit)."""
+    t = c / max(n_classes - 1, 1)
+    # separation lives ONLY in low-noise features — tightly clustered
+    # sizes (µ-gap/σ > 10) and all-forward vs all-backward direction —
+    # so the trained subtree's leaves come out PURE (=> exit) instead of
+    # keeping stragglers that force recirculation; flag probabilities
+    # stay at base-like constants to deny the tree noisy split features
+    return _Phase(
+        size_mu=4.3 + 2.8 * t,              # disjoint lognormal size means
+        size_sigma=0.05,
+        iat_scale=10 ** (-4.0 + 2.2 * t),
+        p_bwd=0.0 if t < 0.5 else 1.0,
+        p_syn=0.02, p_ack=0.7, p_fin=0.02, p_rst=0.01, p_psh=0.3,
+        p_urg=0.005,
+    )
+
+
+def make_profile_dataset(
+    profile: str,
+    n_flows: int = 3000,
+    *,
+    n_classes: int = 4,
+    seed: int = 0,
+    min_len: int = 24,
+    max_len: int = 96,
+) -> FlowDataset:
+    """Synthetic workload with a controlled per-partition exit-rate shape.
+
+    The compaction speedup of the recirculation walk depends entirely on
+    WHEN flows exit, so benchmarks/tests need workloads that pin that
+    axis.  Each class diverges from a shared no-signal base at a chosen
+    phase; a trained :class:`PartitionedDT` can only exit a flow once
+    its class has diverged, so the divergence phase dictates the exit
+    partition:
+
+    ``front``    every class diverges in phase 0 -> exits front-loaded
+                 at partition 0 (the paper's common case — compaction's
+                 best case);
+    ``uniform``  classes spread evenly over divergence phases -> exits
+                 spread across partitions (the last phase always gets
+                 >= 2 classes, otherwise the lone remaining class goes
+                 pure-by-elimination and exits a partition early);
+    ``back``     classes are indistinguishable until the final phase ->
+                 nearly every flow recirculates to the last partition
+                 (compaction's adversarial worst case: nothing to skip).
+
+    Keep ``n_classes`` modest relative to the subtree depth used for
+    training: a greedy depth-d subtree must isolate every diverged class
+    on one branch to exit it, so too many classes per phase push exits a
+    partition later than the profile intends.
+    """
+    if profile not in EXIT_PROFILES:
+        raise ValueError(
+            f"unknown profile {profile!r}; options {EXIT_PROFILES}")
+    rng = np.random.default_rng(np.random.SeedSequence([0xE817, seed]))
+    base = [_base_phase(rng) for _ in range(N_PHASES)]   # shared: no signal
+    diverge = {
+        "front": lambda c: 0,
+        # even spread, extras to the LAST phase (see docstring)
+        "uniform": lambda c: (N_PHASES - 1
+                              - ((n_classes - 1 - c) * N_PHASES) // n_classes),
+        "back": lambda c: N_PHASES - 1,
+    }[profile]
+    profiles = [
+        [base[ph] if ph < diverge(c) else _separated_phase(c, n_classes)
+         for ph in range(N_PHASES)]
+        for c in range(n_classes)
+    ]
+    labels = rng.integers(0, n_classes, size=n_flows)
+    lengths = np.clip(
+        np.exp(rng.normal(np.log(48.0), 0.5, size=n_flows)).astype(np.int64),
+        min_len, max_len,
+    ).astype(np.int32)
+    pkts = _synth_packets(profiles, labels, lengths, rng)
+    return FlowDataset(pkts, lengths, labels.astype(np.int64), n_classes,
+                       f"profile_{profile}")

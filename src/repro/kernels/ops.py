@@ -14,7 +14,7 @@ partition-walk steps trace into a single XLA computation.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,13 @@ def device_tables(tables: PackedTables, ret: RangeExecTables) -> DeviceTables:
         leaf_action=jnp.asarray(ret.leaf_action),
         leaf_valid=jnp.asarray(ret.leaf_valid.astype(np.int32)),
     )
+
+
+# one partition stage: (pkts (B, W, F), sid (B,), dev) ->
+# (regs (B, k), action (B,)) — the contract shared by the engine's walk
+# backends (core.inference) and the compaction gather (kernels.compaction)
+StepFn = Callable[[jnp.ndarray, jnp.ndarray, DeviceTables],
+                  tuple[jnp.ndarray, jnp.ndarray]]
 
 
 def fused_step(

@@ -66,25 +66,32 @@ def _walk_backend(engine: Engine, impl: str | None) -> ExecutionBackend:
     return backend
 
 
-def _single_device_walk(n_subtrees: int, donate: bool, step: StepFn):
+def _single_device_walk(n_subtrees: int, donate: bool, step: StepFn,
+                        compact: bool = False):
     """(batch, dev) -> (labels, recircs, exit_partition).  No caching
     needed: partition_walk is already jitted at module level, and its
-    compile cache keys on the same static (n_subtrees, step) args."""
+    compile cache keys on the same static (n_subtrees, step, compact)
+    args."""
     walk = partition_walk_donated if donate else partition_walk
     return lambda batch, dev: walk(batch, dev, n_subtrees=n_subtrees,
-                                   with_trace=False, step=step)[:3]
+                                   with_trace=False, step=step,
+                                   compact=compact)[:3]
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_walk(mesh, n_subtrees: int, donate: bool, step: StepFn):
+def _sharded_walk(mesh, n_subtrees: int, donate: bool, step: StepFn,
+                  compact: bool = False):
     """shard_map'd walk: the flow axis splits over the mesh's
     data-parallel axes; the device tables replicate.  The walk carries
-    no cross-flow state, so the body needs no collectives."""
+    no cross-flow state, so the body needs no collectives — and with
+    ``compact`` each shard counts its own survivors and picks its own
+    capacity bucket (the switch index is shard-local data, no sync)."""
     spec = flow_batch_spec(mesh)
 
     def body(batch, dev):
         labels, recircs, exit_p, _ = _partition_walk(
-            batch, dev, n_subtrees=n_subtrees, with_trace=False, step=step)
+            batch, dev, n_subtrees=n_subtrees, with_trace=False, step=step,
+            compact=compact)
         return labels, recircs, exit_p
 
     # check_rep=False: the body is collective-free by construction, and
@@ -113,6 +120,7 @@ def run_streaming(
     mesh=None,
     impl: str | None = None,
     inflight: int = 2,
+    compact: bool = False,
 ) -> EngineResult:
     """Streaming inference over a batch larger than one device batch.
 
@@ -122,7 +130,9 @@ def run_streaming(
     high-water is ``inflight`` micro-batches, not ``B``.  With ``mesh``
     the micro-batch is rounded up to a multiple of the mesh's
     data-parallel device count and each chunk executes sharded over the
-    flow axis.
+    flow axis.  ``compact=True`` runs each chunk's walk with early-exit
+    compaction (``kernels.compaction``) — identical verdicts, less work
+    per hop once flows start exiting.
 
     ``inflight`` chunks are dispatched before the first result is
     pulled, so host staging of chunk i+1 overlaps device compute of
@@ -139,14 +149,18 @@ def run_streaming(
     if mesh is not None:
         mb = round_up(mb, flow_batch_devices(mesh))
         walk = _sharded_walk(mesh, engine.ret.n_subtrees,
-                             _should_donate(donate), backend.step)
+                             _should_donate(donate), backend.step, compact)
     else:
         walk = _single_device_walk(engine.ret.n_subtrees,
-                                   _should_donate(donate), backend.step)
+                                   _should_donate(donate), backend.step,
+                                   compact)
 
-    labels = np.zeros(B, dtype=np.int32)
+    # int32 throughout with the walk's -1 sentinels as the fill value:
+    # per-batch results concatenate (stream_batches) without upcasts,
+    # and an unwritten row can never masquerade as a class-0 verdict
+    labels = np.full(B, -1, dtype=np.int32)
     recircs = np.zeros(B, dtype=np.int32)
-    exit_partition = np.zeros(B, dtype=np.int32)
+    exit_partition = np.full(B, -1, dtype=np.int32)
     pending: list[tuple[int, int, tuple]] = []
 
     def collect(keep: int) -> None:
@@ -185,6 +199,7 @@ def stream_batches(
     mesh=None,
     impl: str | None = None,
     inflight: int = 2,
+    compact: bool = False,
 ) -> Iterator[EngineResult]:
     """Open-stream form: one :class:`EngineResult` per incoming batch.
 
@@ -195,4 +210,4 @@ def stream_batches(
     for batch in batches:
         yield run_streaming(engine, batch, micro_batch=micro_batch,
                             donate=donate, mesh=mesh, impl=impl,
-                            inflight=inflight)
+                            inflight=inflight, compact=compact)

@@ -1,0 +1,242 @@
+"""Early-exit compaction + the non-terminating-flow sentinel.
+
+Two properties anchor this file:
+
+  * the compacted walk (``compact=True``: argsort-on-done survivor
+    gather, power-of-two capacity buckets, scatter-back) is
+    BIT-IDENTICAL to the dense walk and to ``PartitionedDT.predict``,
+    for every backend and every exit-rate profile — compaction is a
+    pure execution optimisation;
+  * a flow that never takes an exit action reports the ``-1`` sentinels
+    for ``labels``/``exit_partition`` in all three backends (this used
+    to silently read as "class 0 at partition 0").
+"""
+import numpy as np
+import pytest
+
+from repro.core.inference import Engine
+from repro.core.partition import train_partitioned_dt
+from repro.flows.synthetic import (
+    EXIT_PROFILES, make_dataset, make_profile_dataset,
+)
+from repro.flows.windows import window_features, window_packets
+from repro.kernels.compaction import bucket_caps, compact_perm
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+
+# ---------------------------------------------------------------------------
+# bucket ladder + survivor permutation (the jit-safe building blocks)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,floor", [(1, 128), (100, 64), (128, 128),
+                                     (129, 128), (4096, 128), (5000, 64)])
+def test_bucket_caps_ladder(n, floor):
+    caps = bucket_caps(n, floor)
+    assert caps[0] == 0                      # "everyone exited" fast path
+    assert caps[-1] == n                     # full batch always fits
+    assert list(caps) == sorted(set(caps))   # strictly increasing
+    # interior rungs are floor * 2^i: every survivor count snaps to at
+    # most 2x its bucket, so wasted work is bounded
+    for i, c in enumerate(caps[1:-1]):
+        assert c == floor * 2 ** i
+
+
+def test_bucket_caps_rejects_bad_input():
+    assert bucket_caps(0) == (0,)        # empty batch: degenerate ladder
+    with pytest.raises(ValueError):
+        bucket_caps(-1)
+    with pytest.raises(ValueError):
+        bucket_caps(16, floor=0)
+
+
+def test_empty_batch_all_backends():
+    """B=0 must not crash any backend, compacted or dense (regression:
+    the looped trace path used to hit an unbound local on B=0)."""
+    ds = make_dataset("d2", n_flows=120, seed=5)
+    Xw = window_features(ds, 2)
+    pdt = train_partitioned_dt(Xw, ds.labels, partition_sizes=[2, 2], k=3)
+    wp = window_packets(ds, 2)[:0]
+    eng = Engine.from_model(pdt)
+    for kw in (dict(impl="fused"), dict(impl="fused", compact=True),
+               dict(impl="looped"), dict(impl="looped", compact=True)):
+        res = eng.run(wp, with_trace=True, **kw)
+        assert res.labels.shape == (0,)
+        assert res.n_unterminated == 0
+
+
+def test_compact_perm_survivors_first_in_order():
+    done = np.array([True, False, True, False, False, True])
+    perm, n_active = map(np.asarray, compact_perm(done))
+    assert int(n_active) == 3
+    # stable: survivors keep their original relative order
+    np.testing.assert_array_equal(perm[:3], [1, 3, 4])
+    assert sorted(perm.tolist()) == list(range(6))
+
+
+# ---------------------------------------------------------------------------
+# compacted walk == dense walk == oracle (the tentpole's acceptance bar)
+# ---------------------------------------------------------------------------
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.recircs, b.recircs)
+    np.testing.assert_array_equal(a.exit_partition, b.exit_partition)
+
+
+@pytest.fixture(scope="module")
+def compact_setup(trained_pdt):
+    pdt, Xw, tr = trained_pdt
+    wp = window_packets(tr, 3)
+    eng = Engine.from_model(pdt)
+    dense = eng.run(wp, with_trace=True)
+    oracle = pdt.predict(Xw, return_trace=True)
+    return pdt, wp, eng, dense, oracle
+
+
+def test_compact_fused_bit_identical(compact_setup):
+    pdt, wp, eng, dense, (labels, recircs, exit_p) = compact_setup
+    comp = eng.run(wp, with_trace=True, compact=True)
+    _assert_identical(comp, dense)
+    np.testing.assert_array_equal(comp.labels, labels)
+    np.testing.assert_array_equal(comp.recircs, recircs)
+    np.testing.assert_array_equal(comp.exit_partition, exit_p)
+
+
+def test_compact_trace_is_survivor_masked(compact_setup):
+    """The compacted trace computes registers ONLY for surviving flows:
+    rows of flows that exited before hop p are zero, surviving rows are
+    bit-identical to the dense trace (same per-flow math, just gathered
+    through the capacity bucket and scattered back)."""
+    pdt, wp, eng, dense, _ = compact_setup
+    comp = eng.run(wp, with_trace=True, compact=True)
+    assert len(comp.regs_trace) == len(dense.regs_trace)
+    exited_before = np.full(wp.shape[0], False)
+    for p, (c, d) in enumerate(zip(comp.regs_trace, dense.regs_trace)):
+        np.testing.assert_array_equal(c[~exited_before], d[~exited_before])
+        assert not c[exited_before].any()
+        exited_before |= dense.exit_partition == p
+    assert exited_before.any()      # the model actually exits flows
+
+
+def test_compact_looped_bit_identical(compact_setup):
+    pdt, wp, eng, dense, _ = compact_setup
+    _assert_identical(eng.run_looped(wp, compact=True), dense)
+
+
+def test_compact_pallas_bit_identical(compact_setup):
+    """Pallas step (in-jit SID dispatch) under compaction: the capacity
+    gather feeds the dispatch smaller batches per bucket; verdicts stay
+    bit-identical.  Sliced batch keeps interpret-mode compile sane."""
+    pdt, wp, eng, dense, _ = compact_setup
+    B = 256
+    comp = eng.run(wp[:B], with_trace=False, impl="pallas", compact=True)
+    np.testing.assert_array_equal(comp.labels, dense.labels[:B])
+    np.testing.assert_array_equal(comp.recircs, dense.recircs[:B])
+    np.testing.assert_array_equal(comp.exit_partition,
+                                  dense.exit_partition[:B])
+
+
+@pytest.mark.parametrize("profile", EXIT_PROFILES)
+def test_compact_profiles_all_backends_match_oracle(profile):
+    """The acceptance matrix: backends x exit-rate profiles, all
+    bit-identical to the numpy oracle with compaction on.  front /
+    uniform / back-loaded profiles drive the bucket ladder through
+    completely different shrink schedules (front: most flows gone after
+    hop 0; back: no shrink until the last hop)."""
+    ds = make_profile_dataset(profile, n_flows=360, seed=3)
+    tr, _ = ds.split()
+    Xw = window_features(tr, 3)
+    pdt = train_partitioned_dt(Xw, tr.labels, partition_sizes=[2, 2, 2], k=3)
+    wp = window_packets(tr, 3)
+    labels, recircs, exit_p = pdt.predict(Xw, return_trace=True)
+    eng = Engine.from_model(pdt)
+    for kw in (dict(impl="fused"), dict(impl="pallas"), dict(impl="looped")):
+        res = eng.run(wp, with_trace=False, compact=True, **kw)
+        np.testing.assert_array_equal(res.labels, labels, err_msg=str(kw))
+        np.testing.assert_array_equal(res.recircs, recircs, err_msg=str(kw))
+        np.testing.assert_array_equal(res.exit_partition, exit_p,
+                                      err_msg=str(kw))
+        assert res.n_unterminated == 0
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_compact_property_random_trees(seed):
+    """Property over random datasets / tree shapes: compaction never
+    changes a verdict, whatever the exit pattern."""
+    rng = np.random.default_rng(seed)
+    p = int(rng.integers(2, 4))
+    sizes = [int(rng.integers(1, 4)) for _ in range(p)]
+    k = int(rng.integers(2, 5))
+    ds = make_dataset("d2", n_flows=220, seed=seed)
+    Xw = window_features(ds, p)
+    pdt = train_partitioned_dt(Xw, ds.labels, partition_sizes=sizes, k=k)
+    wp = window_packets(ds, p)
+    eng = Engine.from_model(pdt)
+    dense = eng.run(wp, with_trace=False)
+    _assert_identical(eng.run(wp, with_trace=False, compact=True), dense)
+    _assert_identical(eng.run_looped(wp, with_trace=False, compact=True),
+                      dense)
+    np.testing.assert_array_equal(dense.labels, pdt.predict(Xw))
+
+
+# ---------------------------------------------------------------------------
+# non-terminating flows: the -1 sentinel bugfix
+# ---------------------------------------------------------------------------
+def _truncated_model():
+    """A model whose final partition routes instead of exiting — the
+    shape of a depth-truncated DSE candidate or a corrupt table.  Flows
+    reaching those leaves never take an exit action."""
+    ds = make_dataset("d2", n_flows=300, seed=7)
+    Xw = window_features(ds, 3)
+    pdt = train_partitioned_dt(Xw, ds.labels, partition_sizes=[2, 2, 2], k=3)
+    last = pdt.n_partitions - 1
+    for st_ in pdt.subtrees:
+        if st_.partition == last:
+            for leaf in st_.leaf_next_sid:
+                st_.leaf_next_sid[leaf] = st_.sid      # self-loop
+    return pdt, Xw, window_packets(ds, 3)
+
+
+def test_non_terminating_flows_report_sentinels():
+    """Previously failed: a flow whose walk fell off the end reported
+    ``labels == 0`` and ``exit_partition == 0`` — indistinguishable from
+    a real class-0 verdict at partition 0.  Now every backend (dense and
+    compacted) reports -1/-1, the oracle agrees, and the count is
+    surfaced on EngineResult."""
+    pdt, Xw, wp = _truncated_model()
+    labels, recircs, exit_p = pdt.predict(Xw, return_trace=True)
+    stuck = labels == -1
+    assert stuck.any() and not stuck.all()
+    np.testing.assert_array_equal(exit_p[stuck], -1)
+    eng = Engine.from_model(pdt)
+    for kw in (dict(impl="fused"), dict(impl="fused", compact=True),
+               dict(impl="pallas"), dict(impl="looped"),
+               dict(impl="looped", compact=True)):
+        res = eng.run(wp, with_trace=False, **kw)
+        np.testing.assert_array_equal(res.labels, labels, err_msg=str(kw))
+        np.testing.assert_array_equal(res.exit_partition, exit_p,
+                                      err_msg=str(kw))
+        np.testing.assert_array_equal(res.recircs, recircs, err_msg=str(kw))
+        assert res.n_unterminated == int(stuck.sum())
+        assert res.labels.dtype == np.int32          # concat-stable
+    # downstream: TTD has no value for a flow that never exited — NaN,
+    # not the last window's end (negative indexing used to wrap there)
+    from repro.core.recirc import time_to_detection
+    ds = make_dataset("d2", n_flows=300, seed=7)
+    ttd = time_to_detection(ds.packets, ds.lengths, exit_p,
+                            pdt.n_partitions)
+    assert np.isnan(ttd[stuck]).all()
+    assert np.isfinite(ttd[~stuck]).all()
+
+
+def test_non_terminating_streaming_dtype_stable():
+    """Streaming must carry the sentinel through padded chunks without
+    upcasting (int32 in, int32 out, -1 preserved)."""
+    from repro.serve.streaming import run_streaming
+    pdt, Xw, wp = _truncated_model()
+    eng = Engine.from_model(pdt)
+    full = eng.run(wp, with_trace=False)
+    res = run_streaming(eng, wp, micro_batch=100)
+    _assert_identical(res, full)
+    assert res.labels.dtype == np.int32
+    assert res.exit_partition.dtype == np.int32
+    assert res.n_unterminated == full.n_unterminated > 0

@@ -76,6 +76,24 @@ print("ok")
     assert "ok" in run_subprocess(code, devices=8)
 
 
+def test_sharded_compact_walk():
+    """Early-exit compaction under shard_map: each shard argsorts its
+    own survivors and picks its own capacity bucket (data-dependent
+    lax.switch per shard, no collectives) — verdicts bit-identical to
+    the single-device dense run, fused and pallas steps alike."""
+    code = _SETUP + """
+for mb in (64, 96):
+    check(run_streaming(eng, wp, micro_batch=mb, mesh=mesh, compact=True))
+res = run_streaming(eng, wp[:160], micro_batch=64, mesh=mesh,
+                    impl="pallas", compact=True)
+np.testing.assert_array_equal(res.labels, full.labels[:160])
+np.testing.assert_array_equal(res.recircs, full.recircs[:160])
+np.testing.assert_array_equal(res.exit_partition, full.exit_partition[:160])
+print("ok")
+"""
+    assert "ok" in run_subprocess(code, devices=8)
+
+
 def test_sharded_pallas_backend():
     """The in-jit SID dispatch composes with shard_map: the Pallas walk
     (interpret mode) streams sharded and stays bit-identical."""
