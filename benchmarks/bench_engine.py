@@ -21,6 +21,27 @@ Rows (flows/sec):
     profile workloads (front / uniform / back-loaded; see
     ``flows.synthetic.make_profile_dataset``); ``speedup_vs_dense`` and
     the realised per-partition ``exit_frac`` land in the JSON
+  * ``engine/auto/<S>/<B>/<profile>`` — cost-model routing
+    (``impl="auto"``, ``repro.tuning``) over the (small-S, large-S) x
+    (small-B, large-B) x exit-profile grid: each cell times the forced
+    backends AND the auto route, records the chosen plan, the
+    measured-best fixed backend, ``auto_vs_best`` (>= ~1.0 within
+    noise means the router did its job), and the cost-model estimate
+    per backend (``est``) so crossover points are readable straight
+    from the JSON.  Off-TPU the pallas column is interpret mode and
+    only measured at small B (compile cost unrolls with the grid);
+    the cost model knows this and routes around it.  The S axis labels
+    the *requested* partition depths (``ps``); realized ``S`` is
+    data-dependent and recorded per row — at full dataset sizes the
+    largeS config reaches S≈25-33 on uniform/back workloads, while
+    FRONT-loaded profiles inherently collapse to S≈1-2 regardless of
+    depth (nearly every flow exits in partition 0, so later partitions
+    retain no subtrees; read those cells by their recorded ``S``, not
+    the label).
+  * ``engine/tuned`` — the cached empirical autotuner
+    (``impl="tuned"``): cold-call latency (probe + persist), warm
+    cached-hit throughput, the winning plan, and a bit-exactness check
+    against the backend it routed to
 
 Besides the CSV rows, results are dumped to ``BENCH_engine.json``
 (override with the BENCH_ENGINE_JSON env var) so the perf trajectory is
@@ -37,11 +58,13 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
 from benchmarks.common import (
     Row, dataset, profile_dataset, profile_model, splidt_model, timed,
+    timed_min,
 )
 from repro.core.inference import Engine
 from repro.flows.synthetic import EXIT_PROFILES
@@ -218,6 +241,107 @@ def run(quick: bool = True, smoke: bool = False):
         add(f"engine/compact/{profile}/pallas", us_pc, Bcp,
             exit_frac=exit_frac_p, interpret=interp,
             speedup_vs_dense=round(us_pd / us_pc, 2))
+
+    # ------------------------------------------------------------------
+    # cost-model auto-routing: (S, B, profile) grid
+    # ------------------------------------------------------------------
+    # The acceptance bar for impl="auto": beat or match the best FIXED
+    # backend within benchmark noise in every cell.  Forced rows are
+    # measured in the same process right before the auto row, so cache
+    # warmth is identical; `auto_vs_best` is best_fixed_us / auto_us
+    # (>= 1.0 means auto won; ~0.6+ is within this box's noise band).
+    from repro.tuning import Plan, ShapeInfo, estimate_us
+
+    on_tpu = jax.default_backend() == "tpu"
+    Bs_small = 256 if smoke else 512
+    Bs_large = 512 if smoke else (8192 if quick else 32768)
+    pallas_cap = Bs_small if not on_tpu else Bs_large
+    for S_name, ps in (("smallS", (2, 2, 2)), ("largeS", (4, 4, 4))):
+        for profile in EXIT_PROFILES:
+            pdt_a = profile_model(profile, n_prof, ps=ps)
+            _, te_a = profile_dataset(profile, n_prof).split()
+            for B_name, Bv in (("smallB", Bs_small), ("largeB", Bs_large)):
+                wp_a = _tiled_windows(te_a, len(ps), Bv)
+                eng_a = Engine.from_model(pdt_a)
+                # auto_vs_best is the tracked acceptance metric, so
+                # every entry in `fixed` uses the SAME estimator
+                # (common.timed_min), with the fused/auto pair
+                # additionally interleaved (A/B/A/B) so load drift
+                # between their timing windows cancels
+                rounds = max(repeat, 2)
+                fixed: dict[str, float] = {}
+                run_fused = lambda: eng_a.run(wp_a, with_trace=False,
+                                              impl="fused")
+                run_auto = lambda: eng_a.run(wp_a, with_trace=False,
+                                             impl="auto")
+                res_a = run_auto()                       # warm both paths
+                run_fused()
+                t_f, t_a = [], []
+                for _ in range(rounds):
+                    t0 = time.perf_counter(); run_fused()
+                    t_f.append((time.perf_counter() - t0) * 1e6)
+                    t0 = time.perf_counter(); run_auto()
+                    t_a.append((time.perf_counter() - t0) * 1e6)
+                fixed["fused"], us_auto = min(t_f), min(t_a)
+                if Bv <= pallas_cap:
+                    fixed["pallas"] = timed_min(
+                        lambda: eng_a.run(wp_a, with_trace=False,
+                                          impl="pallas"), rounds=rounds)
+                if B_name == "smallB":      # host-sync path: too slow to
+                    fixed["looped"] = timed_min(   # time at large B
+                        lambda: eng_a.run_looped(wp_a, with_trace=False),
+                        rounds=rounds)
+                shape = ShapeInfo.from_engine(eng_a, wp_a)
+                est = {b: round(estimate_us(shape, Plan(backend=b)))
+                       for b in ("looped", "fused", "pallas")}
+                best = min(fixed, key=fixed.get)
+                add(f"engine/auto/{S_name}/{B_name}/{profile}", us_auto, Bv,
+                    S=shape.S, ps=list(ps), chosen=res_a.plan.backend,
+                    chosen_block_b=res_a.plan.block_b,
+                    best_fixed=best,
+                    auto_vs_best=round(fixed[best] / us_auto, 2),
+                    fixed_us={b: round(v, 1) for b, v in fixed.items()},
+                    est=est)
+
+    # ------------------------------------------------------------------
+    # cached empirical autotuner (impl="tuned")
+    # ------------------------------------------------------------------
+    import tempfile
+
+    from repro.tuning.autotune import CACHE_ENV
+
+    with tempfile.TemporaryDirectory() as td:
+        tune_path = os.path.join(td, "autotune.json")
+        old = os.environ.get(CACHE_ENV)
+        os.environ[CACHE_ENV] = tune_path
+        try:
+            Bt = 256 if smoke else 4096
+            wpt = wp[:Bt]
+            t0 = time.perf_counter()
+            cold = eng.run(wpt, with_trace=False, impl="tuned")
+            cold_us = (time.perf_counter() - t0) * 1e6
+            _, us_tuned = timed(
+                lambda: eng.run(wpt, with_trace=False, impl="tuned"),
+                repeat=repeat)
+            warm = eng.run(wpt, with_trace=False, impl="tuned")
+            # tuned must be bit-identical to the backend it routed to
+            forced = eng.run(wpt, with_trace=False,
+                             impl=warm.plan.backend)
+            exact = bool(
+                np.array_equal(warm.labels, forced.labels)
+                and np.array_equal(warm.recircs, forced.recircs)
+                and np.array_equal(warm.exit_partition,
+                                   forced.exit_partition))
+            add("engine/tuned", us_tuned, Bt,
+                plan=warm.plan.describe(), source=warm.plan.source,
+                cold_call_us=round(cold_us, 1),
+                bit_identical_to_routed=exact,
+                cold_source=cold.plan.source)
+        finally:
+            if old is None:
+                os.environ.pop(CACHE_ENV, None)
+            else:
+                os.environ[CACHE_ENV] = old
 
     path = _write_json(results, "smoke" if smoke else
                        ("quick" if quick else "full"))

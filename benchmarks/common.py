@@ -27,6 +27,24 @@ def timed(fn: Callable, *args, repeat: int = 3, **kw) -> tuple[Any, float]:
     return out, us
 
 
+def timed_min(fn: Callable, *args, rounds: int = 3, **kw) -> float:
+    """Min-of-rounds μs/call (one warm-up call excluded).
+
+    For a deterministic workload the minimum is the noise-robust
+    estimator — a mean lets one GC pause or scheduler hiccup
+    manufacture a fake 2x difference.  Used wherever two configs are
+    *compared* (the engine/auto routing grid); ``timed``'s mean stays
+    for plain throughput rows.
+    """
+    fn(*args, **kw)
+    ts = []
+    for _ in range(max(rounds, 1)):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return min(ts)
+
+
 @functools.lru_cache(maxsize=None)
 def dataset(name: str, n_flows: int = 2500):
     from repro.flows.synthetic import make_dataset

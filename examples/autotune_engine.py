@@ -1,0 +1,89 @@
+"""Autotune the engine for your model + batch shape, then verify parity.
+
+    PYTHONPATH=src python examples/autotune_engine.py [--smoke]
+
+Builds a synthetic SpliDT model, asks the router for its analytical
+pick (``impl="auto"``, cost model — no timing), then runs the real
+tuner (``impl="tuned"``): candidate plans are shortlisted by the cost
+model, timed on the actual windows, and the winner is cached per
+(shape, device fingerprint), so re-running this script resolves the
+plan with a dict lookup.  Finally the tuned route is cross-checked
+bit-for-bit against ``impl="fused"`` — routing may change speed, never
+verdicts (docs/PARITY.md).
+
+``--smoke`` shrinks everything for CI (and points the cache at a temp
+file so CI runs do not touch ``~/.cache``).
+"""
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + temp cache (CI)")
+    ap.add_argument("--flows", type=int, default=2000)
+    ap.add_argument("--batch", type=int, default=4096)
+    args = ap.parse_args()
+    if args.smoke:
+        args.flows, args.batch = 400, 256
+        os.environ["SPLIDT_AUTOTUNE_CACHE"] = os.path.join(
+            tempfile.mkdtemp(prefix="splidt-tune-"), "autotune.json")
+
+    from repro.core.inference import Engine
+    from repro.core.partition import train_partitioned_dt
+    from repro.flows.synthetic import make_dataset
+    from repro.flows.windows import window_features, window_packets
+    from repro.tuning import ShapeInfo, choose_plan, estimate_us, Plan
+    from repro.tuning.autotune import cache_path
+
+    print("=== SpliDT engine autotuning ===")
+    ds = make_dataset("d2", n_flows=args.flows)
+    tr, te = ds.split()
+    P, K = 3, 4
+    Xw = window_features(tr, P)
+    pdt = train_partitioned_dt(Xw, tr.labels, partition_sizes=[3, 3, 3], k=K)
+    wp = window_packets(te, P)
+    reps = -(-args.batch // wp.shape[0])
+    wp = np.tile(wp, (reps, 1, 1, 1))[:args.batch]
+    eng = Engine.from_model(pdt)
+
+    shape = ShapeInfo.from_engine(eng, wp)
+    print(f"model: S={shape.S} subtrees over P={shape.P} partitions, "
+          f"k={shape.k} registers; batch B={shape.B}, W={shape.W}")
+
+    # 1. the analytical router (what impl="auto" does on every call)
+    print("\ncost-model estimates (us/batch):")
+    for b in ("looped", "fused", "pallas"):
+        print(f"  {b:>7}: {estimate_us(shape, Plan(backend=b)):>12.0f}")
+    print(f"impl='auto' would pick: {choose_plan(shape).describe()}")
+
+    # 2. the empirical tuner (impl="tuned"): cold call probes + caches
+    t0 = time.perf_counter()
+    res = eng.run(wp, with_trace=False, impl="tuned")
+    cold_s = time.perf_counter() - t0
+    print(f"\nimpl='tuned' cold call: {cold_s:.2f}s "
+          f"-> plan: {res.plan.describe()}")
+    t0 = time.perf_counter()
+    res2 = eng.run(wp, with_trace=False, impl="tuned")
+    print(f"impl='tuned' warm call: {time.perf_counter() - t0:.3f}s "
+          f"(plan source: {res2.plan.source})")
+    print(f"cache: {cache_path()}")
+
+    # 3. parity: the tuned route must be bit-identical to the reference
+    ref = eng.run(wp, with_trace=False, impl="fused")
+    for field in ("labels", "recircs", "exit_partition"):
+        np.testing.assert_array_equal(getattr(res2, field),
+                                      getattr(ref, field))
+    print("parity vs impl='fused': bit-identical "
+          f"({res2.labels.size} verdicts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,11 +13,10 @@ one device-resident partition walk (:func:`partition_walk`, a single
 jitted ``jax.lax.scan`` over partitions) parameterised by the per-stage
 step function:
 
-* **fused** (default off-TPU) — dense jnp step (``ops.fused_step``):
-  per-flow gathers of the SID-keyed tables, everything in one XLA
-  computation.
-* **pallas** (default on TPU; interpret mode elsewhere) — the Pallas
-  kernels behind the in-jit SID dispatch (``ops.fused_step_pallas``):
+* **fused** — dense jnp step (``ops.fused_step``): per-flow gathers of
+  the SID-keyed tables, everything in one XLA computation.
+* **pallas** (interpret mode off-TPU) — the Pallas kernels behind the
+  in-jit SID dispatch (``ops.fused_step_pallas``):
   flows are argsorted/scattered into SID-homogeneous capacity blocks
   *inside* jit, so the MoE-style grouping costs zero host round trips
   and the walk still crosses the device→host boundary exactly once per
@@ -42,10 +41,18 @@ walk; ``compact=False`` remains the reference path.
 
 Backend selection: ``Engine.run(win_pkts, impl=...)`` or the engine's
 ``impl=`` field; see :func:`get_backend` for the selection matrix.
+``impl="auto"`` routes through the analytical cost model and
+``impl="tuned"`` through the cached empirical autotuner
+(``repro.tuning``) — both resolve a ``Plan`` (backend, Pallas
+``block_b``, compaction + ladder floor) for the batch shape at hand and
+attach it to ``EngineResult.plan``.  docs/ARCHITECTURE.md has the
+end-to-end tour; docs/PARITY.md states the bit-exactness contract that
+makes routing a pure speed decision.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -65,6 +72,8 @@ class EngineResult:
     recircs: np.ndarray          # (B,) partition transitions (control pkts)
     exit_partition: np.ndarray   # (B,) exit hop per flow; -1 sentinel as above
     regs_trace: list[np.ndarray] # per-partition register snapshots
+    plan: "object | None" = None # repro.tuning.Plan when impl="auto"/"tuned"
+                                 # resolved the backend; None for forced impls
 
     @property
     def n_unterminated(self) -> int:
@@ -131,6 +140,7 @@ def _partition_walk(
     with_trace: bool = False,
     step: StepFn = ops.fused_step,
     compact: bool = False,
+    compact_floor: int = compaction.COMPACT_FLOOR,
 ):
     """Device-resident partition walk: scan partitions, carry flow state.
 
@@ -151,7 +161,8 @@ def _partition_walk(
     """
     if compact:
         return _compacted_walk(win_pkts, dev, n_subtrees=n_subtrees,
-                               with_trace=with_trace, step=step)
+                               with_trace=with_trace, step=step,
+                               floor=compact_floor)
     B, P = win_pkts.shape[0], win_pkts.shape[1]
     S = n_subtrees
 
@@ -174,18 +185,20 @@ def _compacted_walk(
     n_subtrees: int,
     with_trace: bool,
     step: StepFn,
+    floor: int = compaction.COMPACT_FLOOR,
 ):
     """Early-exit-compacted walk: unrolled hops, shrinking active buffer.
 
     Hop 0 runs dense (every flow is active at the root); each later hop
     runs the step only on the compacted survivor prefix, in the smallest
     capacity bucket that fits (``lax.switch`` over a static power-of-two
-    ladder — see ``kernels.compaction``).  Unrolled rather than scanned
-    because the per-hop buffer capacity is data-dependent; P is small
-    (2-4 partitions), so the trace stays cheap.
+    ladder ``(0, floor, 2*floor, …, B)`` — see ``kernels.compaction``).
+    Unrolled rather than scanned because the per-hop buffer capacity is
+    data-dependent; P is small (2-4 partitions), so the trace stays
+    cheap.
     """
     B, P = win_pkts.shape[0], win_pkts.shape[1]
-    caps = compaction.bucket_caps(B)
+    caps = compaction.bucket_caps(B, floor)
     carry = _walk_init(B)
     trace = []
     for p in range(P):
@@ -204,7 +217,8 @@ def _compacted_walk(
                                      else None)
 
 
-_WALK_STATIC = ("n_subtrees", "with_trace", "step", "compact")
+_WALK_STATIC = ("n_subtrees", "with_trace", "step", "compact",
+                "compact_floor")
 
 partition_walk = jax.jit(_partition_walk, static_argnames=_WALK_STATIC)
 
@@ -239,7 +253,8 @@ class ExecutionBackend(Protocol):
     step: StepFn | None
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True, compact: bool = False
+            with_trace: bool = True, compact: bool = False,
+            compact_floor: int = compaction.COMPACT_FLOOR
             ) -> EngineResult: ...
 
 
@@ -255,12 +270,13 @@ class WalkBackend:
     step: StepFn
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True, compact: bool = False) -> EngineResult:
+            with_trace: bool = True, compact: bool = False,
+            compact_floor: int = compaction.COMPACT_FLOOR) -> EngineResult:
         P = engine._check_windows(win_pkts)
         labels, recircs, exit_p, regs = partition_walk(
             jnp.asarray(win_pkts[:, :P]), engine.dev,
             n_subtrees=engine.ret.n_subtrees, with_trace=with_trace,
-            step=self.step, compact=compact)
+            step=self.step, compact=compact, compact_floor=compact_floor)
         # ONE device->host transfer for the whole batch
         labels, recircs, exit_p, regs = jax.device_get(
             (labels, recircs, exit_p, regs))
@@ -287,7 +303,11 @@ class LoopedBackend:
         return "ref"
 
     def run(self, engine: "Engine", win_pkts: np.ndarray, *,
-            with_trace: bool = True, compact: bool = False) -> EngineResult:
+            with_trace: bool = True, compact: bool = False,
+            compact_floor: int = compaction.COMPACT_FLOOR) -> EngineResult:
+        # compact_floor is a capacity-ladder knob; the looped backend
+        # compacts by exact host fancy-indexing, so it has no ladder
+        del compact_floor
         B = win_pkts.shape[0]
         P = engine._check_windows(win_pkts)
         impl = self._op_impl(engine.impl)
@@ -359,20 +379,51 @@ _BACKENDS: dict[str, ExecutionBackend] = {
 }
 
 
-def get_backend(impl: str = "auto") -> ExecutionBackend:
-    """Backend selection matrix (see README §Engine architecture):
+@functools.lru_cache(maxsize=None)
+def pallas_backend(block_b: int = ops.BLOCK_B) -> WalkBackend:
+    """Pallas walk backend with a tuned ``block_b`` (cached per size,
+    so jit/streaming caches keyed on the step function stay warm).
+    ``pallas_backend(BLOCK_B) is PALLAS_BACKEND``."""
+    if block_b == ops.BLOCK_B:
+        return PALLAS_BACKEND
+    return WalkBackend(name=f"pallas[bb={block_b}]",
+                       step=ops.pallas_step(block_b))
+
+
+def backend_for_plan(plan) -> ExecutionBackend:
+    """Resolve a :class:`repro.tuning.Plan` to its execution backend."""
+    if plan.backend == "pallas":
+        return pallas_backend(plan.block_b)
+    return _BACKENDS[plan.backend]
+
+
+def get_backend(impl: str = "auto", shape=None) -> ExecutionBackend:
+    """Backend selection matrix (see docs/ARCHITECTURE.md):
 
     ==========  =====================================================
     impl        backend
     ==========  =====================================================
-    auto        pallas on TPU, fused elsewhere
+    auto        with ``shape`` (a ``repro.tuning.ShapeInfo``): the
+                cost model's argmin backend for that workload;
+                without: pallas on TPU, fused elsewhere (legacy
+                platform default)
+    tuned       resolved by ``Engine.run`` / ``run_streaming`` via the
+                autotune cache; rejected here (needs an engine +
+                batch to probe)
     fused, ref  fused (dense jnp walk)
     pallas      pallas (Pallas kernels + in-jit SID dispatch;
                 interpret mode off-TPU)
     looped      looped (host loop, per-partition sync)
     ==========  =====================================================
     """
+    if impl == "tuned":
+        raise ValueError(
+            "impl='tuned' is shape-dependent; use Engine.run / "
+            "run_streaming (they resolve it through repro.tuning)")
     if impl == "auto":
+        if shape is not None:
+            from repro.tuning import choose_plan
+            return backend_for_plan(choose_plan(shape))
         impl = "pallas" if ops._on_tpu() else "fused"
     if impl == "ref":
         impl = "fused"
@@ -380,7 +431,7 @@ def get_backend(impl: str = "auto") -> ExecutionBackend:
         return _BACKENDS[impl]
     except KeyError:
         raise ValueError(
-            f"unknown impl {impl!r}; options: auto, ref, "
+            f"unknown impl {impl!r}; options: auto, tuned, ref, "
             + ", ".join(sorted(_BACKENDS))) from None
 
 
@@ -413,17 +464,39 @@ class Engine:
     # unified entry point
     # ------------------------------------------------------------------
     def run(self, win_pkts: np.ndarray, *, with_trace: bool = True,
-            impl: str | None = None, compact: bool = False) -> EngineResult:
+            impl: str | None = None,
+            compact: bool | str = False) -> EngineResult:
         """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``.
 
-        Dispatches to :func:`get_backend` (``impl`` overrides the
-        engine's default).  Walk backends (fused / pallas) run the
-        fully-jitted scan with a single device→host transfer per batch;
-        ``looped`` syncs per partition.  ``compact=True`` enables
-        early-exit compaction between hops (identical verdicts; the
-        dense ``compact=False`` path remains the reference).
+        ``impl`` overrides the engine's default:
+
+        * a fixed backend name (``fused``/``ref``/``pallas``/``looped``)
+          dispatches straight to :func:`get_backend`;
+        * ``"auto"`` routes through the cost model
+          (``repro.tuning.costmodel``) using this batch's shape —
+          backend AND ``block_b`` are chosen analytically, no timing;
+        * ``"tuned"`` routes through the autotune cache
+          (``repro.tuning.autotune``): first call on a new (shape,
+          host) times a cost-model shortlist, later calls are a lookup.
+
+        For ``auto``/``tuned`` (and for ``compact="auto"``) the chosen
+        :class:`repro.tuning.Plan` is attached to the result as
+        ``EngineResult.plan``.  ``compact=True`` enables early-exit
+        compaction between hops, ``"auto"`` lets the plan decide
+        (identical verdicts either way; the dense ``compact=False``
+        path remains the reference).  All backends are bit-identical,
+        so routing can only change speed, never results.
         """
-        return get_backend(impl or self.impl).run(
+        impl = impl or self.impl
+        if impl in ("auto", "tuned") or compact == "auto":
+            from repro.tuning import get_plan
+            plan = get_plan(self, win_pkts, impl=impl, compact=compact)
+            res = backend_for_plan(plan).run(
+                self, win_pkts, with_trace=with_trace,
+                compact=plan.compact, compact_floor=plan.compact_floor)
+            res.plan = plan
+            return res
+        return get_backend(impl).run(
             self, win_pkts, with_trace=with_trace, compact=compact)
 
     # ------------------------------------------------------------------
@@ -435,12 +508,13 @@ class Engine:
                       mesh=None,
                       impl: str | None = None,
                       inflight: int = 2,
-                      compact: bool = False) -> EngineResult:
+                      compact: bool | str = False) -> EngineResult:
         """Chunk ``win_pkts`` into fixed-size padded micro-batches and
         run each through a walk backend; with ``mesh`` the micro-batch
         fans out across the mesh's flow-batch axis via ``shard_map``.
-        ``compact=True`` early-exit-compacts each chunk's walk.
-        See ``repro.serve.streaming``."""
+        ``compact=True`` early-exit-compacts each chunk's walk;
+        ``impl="auto"``/``"tuned"`` resolve the chunk's plan through
+        ``repro.tuning``.  See ``repro.serve.streaming``."""
         from repro.serve.streaming import run_streaming
         return run_streaming(self, win_pkts, micro_batch=micro_batch,
                              donate=donate, mesh=mesh, impl=impl,

@@ -21,15 +21,32 @@ static (jit-safe), using the same MoE expert-capacity style as
     buffer, and scatters actions (and optionally registers) back to the
     original flow slots.
 
+Why a ladder and not the exact survivor count: jit needs static shapes,
+so the per-hop buffer size must come from a finite set chosen at trace
+time.  The power-of-two ladder bounds the wasted capacity at <2x the
+survivor count (bucket ``2^i*floor`` serves counts in
+``(2^(i-1)*floor, 2^i*floor]``) while keeping the ``lax.switch`` branch
+count at ``log2(B/floor) + 2`` — every branch is compiled once, and the
+data-dependent part is just the branch index.  The ``floor`` (default
+:data:`COMPACT_FLOOR`, tunable via ``compact_floor=`` /
+``repro.tuning``) sets the smallest non-empty bucket: below it the
+gather/scatter overhead dominates the step, so finer rungs cannot pay
+for themselves.
+
 Correctness does not depend on the bucket choice: a too-large bucket
 merely drags some already-``done`` flows through the step, and their
 actions are masked out by the walk's ``active`` bookkeeping.  The step
 functions are per-flow (no cross-flow reductions), so gathering a
 subset produces bit-identical per-flow results — the compacted walk is
-bit-identical to the dense walk and to ``PartitionedDT.predict``.
+bit-identical to the dense walk and to ``PartitionedDT.predict``
+(``docs/PARITY.md`` states the full contract).
 
 The capacity-0 branch skips the step entirely, so a batch whose flows
 have all exited pays nothing for the remaining hops.
+
+Shape/dtype conventions: ``pkts`` f32 ``(B, W, PKT_NFIELDS)``, ``sid``
+int32 ``(B,)``, ``done`` bool ``(B,)``, registers f32 ``(B, k)``,
+actions int32 ``(B,)`` with ``-1`` in unvisited slots.
 """
 from __future__ import annotations
 

@@ -11,15 +11,28 @@ walk and the whole multi-partition walk stays on device.
 
 Capacity bound (the MoE "expert capacity" trick applied to subtrees):
 with B flows and S subtrees, block-aligning every SID segment needs at
-most ceil(B / block_b) + S blocks — each SID wastes strictly less than
-one block of padding.  The bound depends only on static shapes, so the
-dispatch has fixed shapes at trace time and the data-dependent routing
-lives entirely in device-side gathers/scatters.
+most ceil(B / block_b) + S blocks.  Proof sketch: lay the SID-sorted
+flows out contiguously and round each SID's segment start up to a block
+boundary; segment s then occupies ceil(n_s / block_b) blocks, and
+sum_s ceil(n_s / block_b) <= sum_s (n_s / block_b + 1) =
+B / block_b + S <= ceil(B / block_b) + S — each SID wastes strictly
+less than one block of padding.  The bound depends only on static
+shapes (B, S, block_b), so the dispatch has fixed shapes at trace time
+and the data-dependent routing lives entirely in device-side
+gathers/scatters.  ``block_b`` is a tuning knob (``repro.tuning``):
+smaller blocks waste less padding when S is large relative to B,
+larger blocks amortise per-block launch cost when B dominates.
 
 This module also owns the padding helpers shared by the streaming
 scheduler (`repro.serve.streaming`) and the Pallas block padding
 (`repro.kernels.feature_window`): one definition of "pad the leading
 axis with zero rows" instead of three.
+
+Shape/dtype conventions: flow registers are f32 ``(B, k)``; SIDs are
+int32 ``(B,)`` in ``[0, S)``; actions are int32 ``(B,)`` (``-1`` where
+no leaf matched, which the walk treats as "keep the sentinel" — see
+``docs/PARITY.md``).  Padded capacity rows carry zero registers and are
+never gathered back.
 """
 from __future__ import annotations
 
@@ -30,7 +43,7 @@ import numpy as np
 
 
 def round_up(n: int, m: int) -> int:
-    """Smallest multiple of ``m`` that is >= ``n``."""
+    """Smallest multiple of ``m`` that is >= ``n`` (ints, m > 0)."""
     return -(-n // m) * m
 
 
@@ -51,7 +64,10 @@ def pad_axis0(x, target: int):
 def capacity_blocks(n_flows: int, n_subtrees: int, block_b: int) -> int:
     """Static worst-case block count for SID-grouping ``n_flows`` flows:
     ceil(B/bb) full blocks of payload plus at most one partial block of
-    padding per subtree."""
+    padding per subtree (see the module docstring for the proof).  Pure
+    ints — usable at trace time and by the cost model
+    (``repro.tuning.costmodel``), which charges pallas plans for
+    exactly this padding."""
     return -(-n_flows // block_b) + n_subtrees
 
 
@@ -73,10 +89,12 @@ def sid_dispatch(sid: jnp.ndarray, *, n_subtrees: int,
                  block_b: int) -> SidDispatch:
     """Plan the SID grouping entirely in jnp (jit-safe, static shapes).
 
-    Each SID's flows land contiguously at a block-aligned offset; the
-    per-block SID map is recovered by binary search over the running
-    block count.  Equivalent to the host-side sort+segment of PR 1, but
-    traceable — it fuses into the partition-walk scan.
+    ``sid`` (B,) int32 in ``[0, n_subtrees)`` → :class:`SidDispatch`
+    (all int32 device arrays; see the class docstring for per-field
+    shapes).  Each SID's flows land contiguously at a block-aligned
+    offset; the per-block SID map is recovered by binary search over
+    the running block count.  Equivalent to the host-side sort+segment
+    of PR 1, but traceable — it fuses into the partition-walk scan.
     """
     B = sid.shape[0]
     counts = jnp.bincount(sid, length=n_subtrees)            # (S,)

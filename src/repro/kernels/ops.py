@@ -117,16 +117,48 @@ def fused_step_pallas(
     grouped Pallas kernel behind the in-jit dispatch — no host-side
     grouping, so the whole partition walk jits into one computation
     (``interpret=True`` off-TPU keeps it runnable anywhere).
+
+    This is :func:`pallas_step` at the default ``block_b``; the tuner
+    resolves other block sizes through the factory.
     """
+    return _pallas_step_impl(pkts, sid, dev, BLOCK_B)
+
+
+def _pallas_step_impl(pkts, sid, dev, block_b):
     interpret = not _on_tpu()
     regs = feature_window_pallas(
         pkts, dev.slot_op[sid], dev.slot_field[sid], dev.slot_pred[sid],
-        dev.slot_init[sid], interpret=interpret)
+        dev.slot_init[sid], interpret=interpret, block_b=block_b)
     action = dispatch_dt_traverse(
         regs, sid, dev.thresholds, dev.leaf_lo, dev.leaf_hi,
         dev.leaf_action, dev.leaf_valid,
-        interpret=interpret, block_b=BLOCK_B)
+        interpret=interpret, block_b=block_b)
     return regs, action
+
+
+@functools.lru_cache(maxsize=None)
+def pallas_step(block_b: int = BLOCK_B) -> StepFn:
+    """Pallas partition stage with ``block_b`` as a tunable parameter.
+
+    ``block_b`` sets both the feature kernel's flow-block rows and the
+    SID dispatch's capacity-block size (``ceil(B/block_b) + S`` blocks
+    worst case — smaller blocks waste less padding at small B / large
+    S, larger ones amortise per-block launch cost).  Cached so each
+    ``block_b`` maps to ONE function object: jit and the streaming
+    scheduler's ``lru_cache`` both key on step identity, so reusing the
+    object reuses every downstream compilation.
+    """
+    if block_b <= 0:
+        raise ValueError(f"block_b must be positive, got {block_b}")
+    if block_b == BLOCK_B:
+        return fused_step_pallas
+
+    def step(pkts: jnp.ndarray, sid: jnp.ndarray, dev: DeviceTables):
+        return _pallas_step_impl(pkts, sid, dev, block_b)
+
+    step.__name__ = step.__qualname__ = f"fused_step_pallas_bb{block_b}"
+    step.__doc__ = f"fused_step_pallas with block_b={block_b}."
+    return step
 
 
 # ---------------------------------------------------------------------------

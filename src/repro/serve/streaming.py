@@ -7,11 +7,15 @@ flow batches into fixed-size micro-batches, pads the ragged tail with
 invalid packets (valid = 0 — the same padding the windowing pipeline
 emits), and pushes each chunk through a fully-jitted partition walk:
 
-  * every micro-batch has the SAME shape, so XLA compiles the walk
-    exactly once and replays it per chunk;
+  * every micro-batch has the SAME (mb, P, W, F) shape — including the
+    padded tail — so XLA compiles the walk exactly once and replays it
+    per chunk;
   * any walk backend works (``impl="fused"`` or ``"pallas"`` — the
     in-jit SID dispatch keeps the Pallas path streamable; ``"looped"``
-    is rejected because it syncs per partition);
+    is rejected because it syncs per partition).  ``impl="auto"`` /
+    ``"tuned"`` route through ``repro.tuning`` with the *chunk* shape
+    (B = micro_batch, n_devices from the mesh) — the chunk, not the
+    unbounded stream, is what executes;
   * with a ``mesh``, each micro-batch fans out across the mesh's
     data-parallel axes via ``shard_map`` — the walk is per-flow, so no
     collectives are needed and scaling is embarrassingly parallel;
@@ -20,10 +24,26 @@ emits), and pushes each chunk through a fully-jitted partition walk:
   * results land in preallocated host arrays — one device→host
     transfer per micro-batch, none per partition.
 
+**Inflight pipelining.**  jax dispatch is asynchronous: ``walk(batch)``
+returns device futures immediately.  The scheduler keeps up to
+``inflight`` chunks un-collected, so while the device crunches chunk i
+the host is already slicing/padding/uploading chunk i+1; memory
+high-water is ``inflight`` micro-batches of packets plus their verdict
+buffers, NOT the full stream.  ``inflight=1`` collects each chunk
+before dispatching the next (the fully synchronous PR 1 behaviour);
+raising it past 2–3 only helps when host staging time rivals device
+compute time.
+
 ``run_streaming`` is the closed-batch entry point (numpy in → verdicts
 out); ``stream_batches`` is the open-stream form that consumes an
 iterator of flow batches, for callers that never materialise the full
 workload.
+
+Shape/dtype conventions (shared with ``core.inference``): packet
+windows are f32 ``(B, P, W, PKT_NFIELDS)``; verdict arrays are int32
+``(B,)`` with ``-1`` sentinels for flows that never exit (see
+``docs/PARITY.md``); padded rows are all-zero packets (valid=0) whose
+verdicts are sliced off before they reach the caller.
 """
 from __future__ import annotations
 
@@ -43,11 +63,13 @@ from repro.core.inference import (
     ExecutionBackend,
     StepFn,
     _partition_walk,
+    backend_for_plan,
     get_backend,
     partition_walk,
     partition_walk_donated,
 )
 from repro.distributed.sharding import flow_batch_devices, flow_batch_spec
+from repro.kernels.compaction import COMPACT_FLOOR
 from repro.kernels.dispatch import pad_axis0, round_up
 
 
@@ -66,21 +88,41 @@ def _walk_backend(engine: Engine, impl: str | None) -> ExecutionBackend:
     return backend
 
 
+def _resolve_backend(engine: Engine, impl: str | None, mesh, mb: int,
+                     compact, win_pkts):
+    """Pick the chunk's walk backend; returns (backend, compact,
+    compact_floor, plan).  Fixed impls go straight to
+    :func:`get_backend`; ``auto``/``tuned`` (or ``compact="auto"``)
+    resolve a ``repro.tuning.Plan`` for the CHUNK shape — B is the
+    micro-batch, ``n_devices`` the mesh's data-parallel extent — with
+    candidates restricted to the streamable walk backends."""
+    impl = impl or engine.impl
+    if impl not in ("auto", "tuned") and compact != "auto":
+        return _walk_backend(engine, impl), bool(compact), COMPACT_FLOOR, None
+    from repro.tuning import ShapeInfo, get_plan
+    n_dev = flow_batch_devices(mesh) if mesh is not None else 1
+    shape = ShapeInfo.from_engine(engine, win_pkts, B=mb, n_devices=n_dev)
+    plan = get_plan(engine, win_pkts, impl=impl, shape=shape,
+                    backends=("fused", "pallas"), compact=compact,
+                    streaming=True)
+    return (backend_for_plan(plan), plan.compact, plan.compact_floor, plan)
+
+
 def _single_device_walk(n_subtrees: int, donate: bool, step: StepFn,
-                        compact: bool = False):
+                        compact: bool = False, floor: int = COMPACT_FLOOR):
     """(batch, dev) -> (labels, recircs, exit_partition).  No caching
     needed: partition_walk is already jitted at module level, and its
-    compile cache keys on the same static (n_subtrees, step, compact)
-    args."""
+    compile cache keys on the same static (n_subtrees, step, compact,
+    compact_floor) args."""
     walk = partition_walk_donated if donate else partition_walk
     return lambda batch, dev: walk(batch, dev, n_subtrees=n_subtrees,
                                    with_trace=False, step=step,
-                                   compact=compact)[:3]
+                                   compact=compact, compact_floor=floor)[:3]
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_walk(mesh, n_subtrees: int, donate: bool, step: StepFn,
-                  compact: bool = False):
+                  compact: bool = False, floor: int = COMPACT_FLOOR):
     """shard_map'd walk: the flow axis splits over the mesh's
     data-parallel axes; the device tables replicate.  The walk carries
     no cross-flow state, so the body needs no collectives — and with
@@ -91,7 +133,7 @@ def _sharded_walk(mesh, n_subtrees: int, donate: bool, step: StepFn,
     def body(batch, dev):
         labels, recircs, exit_p, _ = _partition_walk(
             batch, dev, n_subtrees=n_subtrees, with_trace=False, step=step,
-            compact=compact)
+            compact=compact, compact_floor=floor)
         return labels, recircs, exit_p
 
     # check_rep=False: the body is collective-free by construction, and
@@ -120,7 +162,7 @@ def run_streaming(
     mesh=None,
     impl: str | None = None,
     inflight: int = 2,
-    compact: bool = False,
+    compact: bool | str = False,
 ) -> EngineResult:
     """Streaming inference over a batch larger than one device batch.
 
@@ -132,28 +174,38 @@ def run_streaming(
     data-parallel device count and each chunk executes sharded over the
     flow axis.  ``compact=True`` runs each chunk's walk with early-exit
     compaction (``kernels.compaction``) — identical verdicts, less work
-    per hop once flows start exiting.
+    per hop once flows start exiting; ``compact="auto"`` lets the
+    routing plan decide.
+
+    ``impl="auto"`` / ``"tuned"`` resolve a ``repro.tuning.Plan`` for
+    the chunk shape (backend + ``block_b`` + compaction), restricted to
+    the streamable walk backends; the plan lands on the returned
+    result's ``.plan``.
 
     ``inflight`` chunks are dispatched before the first result is
     pulled, so host staging of chunk i+1 overlaps device compute of
     chunk i (jax dispatch is async); ``inflight=1`` restores the fully
     synchronous PR 1 behaviour.
     """
-    backend = _walk_backend(engine, impl)
     P = engine._check_windows(win_pkts)
     B = win_pkts.shape[0]
-    # micro_batch <= 0 is rejected by microbatches() below
+    if micro_batch <= 0:
+        raise ValueError("micro_batch must be positive")
     if inflight <= 0:
         raise ValueError("inflight must be positive")
     mb = micro_batch
     if mesh is not None:
         mb = round_up(mb, flow_batch_devices(mesh))
+    backend, compact, floor, plan = _resolve_backend(
+        engine, impl, mesh, mb, compact, win_pkts)
+    if mesh is not None:
         walk = _sharded_walk(mesh, engine.ret.n_subtrees,
-                             _should_donate(donate), backend.step, compact)
+                             _should_donate(donate), backend.step, compact,
+                             floor)
     else:
         walk = _single_device_walk(engine.ret.n_subtrees,
                                    _should_donate(donate), backend.step,
-                                   compact)
+                                   compact, floor)
 
     # int32 throughout with the walk's -1 sentinels as the fill value:
     # per-batch results concatenate (stream_batches) without upcasts,
@@ -187,7 +239,7 @@ def run_streaming(
         pending.append((lo, hi, walk(batch, engine.dev)))
         collect(inflight - 1)
     collect(0)
-    return EngineResult(labels, recircs, exit_partition, [])
+    return EngineResult(labels, recircs, exit_partition, [], plan=plan)
 
 
 def stream_batches(
@@ -199,7 +251,7 @@ def stream_batches(
     mesh=None,
     impl: str | None = None,
     inflight: int = 2,
-    compact: bool = False,
+    compact: bool | str = False,
 ) -> Iterator[EngineResult]:
     """Open-stream form: one :class:`EngineResult` per incoming batch.
 

@@ -1,0 +1,371 @@
+"""Cached empirical autotuner for the engine (``impl="tuned"``).
+
+The cost model (``repro.tuning.costmodel``) routes analytically; this
+module *measures*.  Given the user's actual model and batch shape it
+
+  1. shortlists candidate plans by cost-model estimate (so off-TPU it
+     never wastes minutes timing interpret-mode pallas at huge B),
+  2. times each shortlisted plan on a bounded probe slice of the real
+     windows (compile excluded: one warm-up call, then ``repeat`` timed
+     calls, median),
+  3. persists the winner to a JSON cache keyed by (shape key, device
+     fingerprint), so every later ``impl="tuned"`` call with the same
+     shape on the same host is a dict lookup,
+  4. falls back to the pure cost model when timing is disallowed
+     (``allow_timing=False`` or ``SPLIDT_AUTOTUNE_NO_TIME=1``) — e.g.
+     latency-sensitive callers that must never run probes inline.
+
+Cache location: ``SPLIDT_AUTOTUNE_CACHE`` env var, else
+``~/.cache/splidt/autotune.json``.  The cache stores *decisions*, not
+timings-for-dashboards — `benchmarks/bench_engine.py` owns trend
+tracking.
+
+Correctness is never at stake: every backend is bit-identical (see
+``docs/PARITY.md``), so a stale or even corrupt cache entry can only
+cost speed.  Unknown backends in a cache entry (e.g. written by a newer
+version) are ignored and retuned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+from repro.kernels.compaction import COMPACT_FLOOR
+from repro.kernels.dt_traverse import BLOCK_B
+from repro.tuning.costmodel import (
+    BACKENDS,
+    Plan,
+    ShapeInfo,
+    candidate_plans,
+    choose_plan,
+    estimate_us,
+)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.inference import Engine
+
+CACHE_ENV = "SPLIDT_AUTOTUNE_CACHE"
+NO_TIME_ENV = "SPLIDT_AUTOTUNE_NO_TIME"
+CACHE_VERSION = 1
+
+#: Probe slice bound: candidates are timed on at most this many flows
+#: (per-flow throughput is what the plan optimises; beyond a few
+#: thousand flows the ranking is stable and probing the full batch
+#: would defeat the point of tuning).
+PROBE_FLOWS = 2048
+
+#: How many cost-model-shortlisted candidates get timed.
+SHORTLIST = 4
+
+
+def cache_path() -> str:
+    """Resolve the cache file path (env override, else ~/.cache)."""
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "splidt",
+                        "autotune.json")
+
+
+@functools.lru_cache(maxsize=1)
+def device_fingerprint() -> str:
+    """Host identity the cache is keyed on.
+
+    Captures what changes plan rankings: the jax platform, the device
+    kind, how many devices are visible, and (for CPU) the core count
+    that bounds intra-op parallelism.  Cached — the device set is fixed
+    for the life of the process.
+    """
+    import jax
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", dev.platform)
+    return (f"{jax.default_backend()}:{kind}:{len(jax.devices())}"
+            f":cpu{os.cpu_count()}").replace(" ", "_")
+
+
+def _compact_tag(compact) -> str:
+    """Cache-key fragment for the caller's compaction request.
+
+    A plan tuned under ``compact="auto"`` may legitimately be
+    compacted; serving it to a caller who PINNED ``compact=False``
+    (the dense reference path) would silently override the pin — so
+    pinned and auto requests tune and cache separately.
+    """
+    if compact in ("auto", None):
+        return "cA"
+    return "c1" if compact else "c0"
+
+
+def cache_key(shape: ShapeInfo, *, streaming: bool = False,
+              compact="auto", backends: Sequence[str] = BACKENDS) -> str:
+    """Cache identity: device × shape × every search restriction.
+
+    ``compact`` and ``backends`` are part of the key because a winner
+    found under a narrowed search (pinned compaction, walk-only
+    backends) must not be served to a later full search — it may have
+    never competed against the true best candidate.
+    """
+    return (f"{device_fingerprint()}/{shape.key()}"
+            f"/{_compact_tag(compact)}/b={'+'.join(sorted(backends))}"
+            + ("/stream" if streaming else ""))
+
+
+# ---------------------------------------------------------------------------
+# cache I/O — tolerant of missing/corrupt files (tuning must never
+# break inference)
+# ---------------------------------------------------------------------------
+# (path, mtime_ns, size) -> entries; keeps the warm impl="tuned" path
+# off the disk (stream_batches resolves a plan per incoming batch)
+_load_memo: dict[str, tuple[tuple, dict]] = {}
+
+# (cache path, cache key) -> winning Plan from THIS process's timed
+# searches.  The backstop for unwritable cache files (read-only HOME,
+# sandboxes): persistence may fail, but "every later impl='tuned' call
+# is a dict lookup" must still hold within the process — without this,
+# a failed save silently re-runs the multi-second probe search on
+# every batch.
+_winner_memo: dict[tuple[str, str], Plan] = {}
+
+
+def _file_stamp(path: str):
+    st = os.stat(path)
+    return (st.st_mtime_ns, st.st_size)
+
+
+def load_cache(path: str | None = None) -> dict:
+    path = path or cache_path()
+    try:
+        stamp = _file_stamp(path)
+        hit = _load_memo.get(path)
+        if hit is not None and hit[0] == stamp:
+            return dict(hit[1])
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("version") != CACHE_VERSION:
+            return {}
+        entries = data.get("entries")
+        entries = entries if isinstance(entries, dict) else {}
+        _load_memo[path] = (stamp, entries)
+        # a COPY: callers (autotune) mutate the result before saving,
+        # and a failed save must not leave phantom entries in the memo
+        return dict(entries)
+    except (OSError, ValueError):
+        return {}
+
+
+def save_cache(entries: dict, path: str | None = None) -> str:
+    path = path or cache_path()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": CACHE_VERSION, "entries": entries}, f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    try:
+        _load_memo[path] = (_file_stamp(path), dict(entries))
+    except OSError:
+        pass
+    return path
+
+
+def _plan_to_entry(plan: Plan, us: float) -> dict:
+    return {"backend": plan.backend, "block_b": plan.block_b,
+            "compact": plan.compact, "compact_floor": plan.compact_floor,
+            "us": round(us, 1)}
+
+
+def _entry_to_plan(entry: dict) -> Plan | None:
+    try:
+        if entry["backend"] not in BACKENDS:
+            return None
+        return Plan(backend=entry["backend"],
+                    block_b=int(entry.get("block_b", BLOCK_B)),
+                    compact=bool(entry.get("compact", False)),
+                    compact_floor=int(entry.get("compact_floor",
+                                                COMPACT_FLOOR)),
+                    source="cache", est_us=float(entry.get("us", 0)) or None)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+def time_plan(engine: "Engine", win_pkts: np.ndarray, plan: Plan, *,
+              repeat: int = 3) -> float:
+    """Median μs/call for running ``win_pkts`` under ``plan``.
+
+    One un-timed warm-up call absorbs compilation; verdict arrays are
+    fetched inside the timed region (the engine's real cost includes the
+    device→host transfer).
+    """
+    from repro.core.inference import backend_for_plan
+
+    backend = backend_for_plan(plan)
+
+    def call():
+        return backend.run(engine, win_pkts, with_trace=False,
+                           compact=plan.compact,
+                           compact_floor=plan.compact_floor)
+
+    call()                                       # compile / warm caches
+    ts = []
+    for _ in range(max(repeat, 1)):
+        t0 = time.perf_counter()
+        call()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+@functools.lru_cache(maxsize=4096)
+def _choose_cached(shape: ShapeInfo, backends: tuple, compact) -> Plan:
+    """Memoised :func:`choose_plan` for the ``impl="auto"`` hot path.
+
+    ShapeInfo is frozen/hashable and the default coefficients are
+    per-process constants, so the argmin for a given (shape, backends,
+    compact) never changes within a process — re-enumerating candidates
+    on every micro-batch would be pure overhead.
+    """
+    return choose_plan(shape, backends=backends, compact=compact)
+
+
+def _timing_allowed(allow_timing: bool | None) -> bool:
+    if allow_timing is not None:
+        return allow_timing
+    return os.environ.get(NO_TIME_ENV, "") not in ("1", "true", "yes")
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+def autotune(
+    engine: "Engine",
+    win_pkts: np.ndarray,
+    *,
+    shape: ShapeInfo | None = None,
+    backends: Sequence[str] = BACKENDS,
+    compact: bool | str | None = "auto",
+    allow_timing: bool | None = None,
+    cache: bool = True,
+    path: str | None = None,
+    force: bool = False,
+    repeat: int = 3,
+    probe_flows: int = PROBE_FLOWS,
+    shortlist: int = SHORTLIST,
+    streaming: bool = False,
+) -> Plan:
+    """Resolve the best plan for (engine, batch shape) on this host.
+
+    Resolution order: cache hit → timed search → cost model.  ``shape``
+    defaults to the batch's own shape; pass it explicitly when tuning
+    for a different deployment batch size than the probe windows.
+    ``backends`` restricts candidates (streaming passes the walk
+    backends only); ``compact="auto"`` lets the tuner measure
+    compaction both ways, True/False pins it.  ``force=True`` ignores
+    (and overwrites) the cache entry.
+
+    The probe never runs more than ``probe_flows`` flows, and the
+    cost-model ranking is what keeps a CPU-only host from stalling:
+    candidates are sorted by estimate first and only the top
+    ``shortlist`` get timed, so interpret-mode pallas at large B (whose
+    estimate is enormous off-TPU) never reaches the stopwatch.  At
+    small B its estimate is competitive and it IS timed — that is the
+    point of measuring.
+    """
+    if shape is None:
+        shape = ShapeInfo.from_engine(engine, win_pkts)
+    key = cache_key(shape, streaming=streaming, compact=compact,
+                    backends=backends)
+
+    mkey = (path or cache_path(), key)
+    entries = load_cache(path) if cache else {}
+    if cache and not force:
+        hit = _entry_to_plan(entries.get(key, {}))
+        if hit is None:
+            hit = _winner_memo.get(mkey)
+        if hit is not None and hit.backend in backends:
+            return hit
+
+    if not _timing_allowed(allow_timing):
+        return choose_plan(shape, backends=backends,
+                           compact=False if compact == "auto" else compact)
+
+    # ---- timed search over the cost-model shortlist -------------------
+    n = min(shape.B, probe_flows, win_pkts.shape[0])
+    probe = win_pkts[:n]
+    ranked = sorted(
+        candidate_plans(shape, backends=backends, compact=compact),
+        key=lambda p: estimate_us(shape, p))
+    best_plan, best_us = None, float("inf")
+    for plan in ranked[:max(shortlist, 1)]:
+        us = time_plan(engine, probe, plan, repeat=repeat)
+        if us < best_us:
+            best_plan, best_us = plan, us
+    winner = dataclasses.replace(best_plan, source="timed",
+                                 est_us=round(best_us, 1))
+    if cache:
+        _winner_memo[mkey] = dataclasses.replace(winner, source="cache")
+        entries[key] = _plan_to_entry(winner, best_us)
+        try:
+            save_cache(entries, path)
+        except OSError:
+            pass    # unwritable cache (read-only HOME, sandbox): the
+                    # in-process memo above still routes this process;
+                    # never raise out of inference over persistence
+    return winner
+
+
+def get_plan(
+    engine: "Engine",
+    win_pkts: np.ndarray | None = None,
+    *,
+    impl: str = "auto",
+    shape: ShapeInfo | None = None,
+    backends: Sequence[str] = BACKENDS,
+    compact: bool | str | None = False,
+    streaming: bool = False,
+) -> Plan:
+    """The engine's entry point: resolve ``impl`` → :class:`Plan`.
+
+    * ``impl="auto"``  — pure cost model (no timing ever, no cache).
+    * ``impl="tuned"`` — :func:`autotune` (cache → timed → cost model).
+    * a fixed backend name — a forced plan for that backend, with
+      ``compact="auto"`` still resolved by the cost model.
+
+    ``compact`` may be True/False (pinned), or "auto" (the plan
+    decides).
+    """
+    if shape is None:
+        if win_pkts is None:
+            raise ValueError("need win_pkts or an explicit shape")
+        shape = ShapeInfo.from_engine(engine, win_pkts)
+    if impl == "tuned":
+        if win_pkts is None:
+            # nothing to probe: degrade gracefully to the cost model
+            return choose_plan(shape, backends=backends,
+                               compact=False if compact == "auto" else compact)
+        return autotune(engine, win_pkts, shape=shape, backends=backends,
+                        compact=compact, streaming=streaming)
+    if impl == "auto":
+        return _choose_cached(shape, tuple(backends), compact)
+    if impl == "ref":
+        impl = "fused"
+    if impl not in BACKENDS:
+        raise ValueError(f"unknown impl {impl!r}; options: auto, tuned, "
+                         "ref, " + ", ".join(sorted(BACKENDS)))
+    if impl not in backends:
+        raise ValueError(f"impl {impl!r} not allowed here "
+                         f"(allowed: {tuple(backends)})")
+    if compact == "auto":
+        plan = choose_plan(shape, backends=(impl,), compact="auto")
+        return dataclasses.replace(plan, source="forced")
+    plan = Plan(backend=impl, compact=bool(compact), source="forced")
+    return dataclasses.replace(
+        plan, est_us=round(estimate_us(shape, plan), 1))

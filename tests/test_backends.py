@@ -1,7 +1,11 @@
 """The ExecutionBackend layer: every backend (looped / fused / pallas)
 is the same machine — identical EngineResult bit-for-bit — and the
 walk backends (fused, pallas with its in-jit SID dispatch) cross the
-device->host boundary exactly once per batch."""
+device->host boundary exactly once per batch.
+
+Zero-tolerance equality here is a contract, not a tolerance choice:
+docs/PARITY.md states the three invariants (canonical reduction order,
+-1 sentinels, padding-leak) that make it achievable."""
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -10,6 +10,8 @@ Two properties anchor this file:
   * a flow that never takes an exit action reports the ``-1`` sentinels
     for ``labels``/``exit_partition`` in all three backends (this used
     to silently read as "class 0 at partition 0").
+
+Both are instances of the bit-exactness contract in docs/PARITY.md.
 """
 import numpy as np
 import pytest

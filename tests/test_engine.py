@@ -1,7 +1,8 @@
 """The central property: the data-plane engine (feature_window +
 dt_traverse + recirculation) computes EXACTLY the same labels, recirc
 counts, and exit partitions as the offline PartitionedDT oracle — on
-both the fused (single jitted lax.scan) and looped execution paths."""
+both the fused (single jitted lax.scan) and looped execution paths.
+The contract behind the exactness is documented in docs/PARITY.md."""
 import numpy as np
 import pytest
 

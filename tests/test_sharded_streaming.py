@@ -2,7 +2,9 @@
 shard_map'd partition walk over the flow-batch axis must be
 indistinguishable from the single-device fused run — including uneven
 final micro-batches, micro-batches that don't divide the device count,
-and donation on/off."""
+and donation on/off.  Sharding is part of the bit-exactness contract
+(docs/PARITY.md): a per-flow walk has no cross-shard reductions, so
+shard count can never change bits."""
 from tests.conftest import run_subprocess
 
 _SETUP = """

@@ -1,6 +1,7 @@
 """Streaming scheduler: chunked + padded micro-batches over the fused
 engine must be indistinguishable from one full-batch run, for every
-chunking — including ragged tails and chunks larger than the batch."""
+chunking — including ragged tails and chunks larger than the batch
+(the padding-leak invariant of docs/PARITY.md)."""
 import numpy as np
 import pytest
 

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Keep the prose honest: check docs links and repo paths.
+
+    python tools/check_docs.py [files...]
+
+Two checks over the repo's markdown (default: README.md, ROADMAP.md,
+docs/*.md):
+
+  1. every relative markdown link ``[text](target)`` resolves to a file
+     or directory in the repo (http(s) links and #anchors are skipped);
+  2. every backticked repo path (``src/...``, ``tests/...``,
+     ``docs/...``, ``benchmarks/...``, ``examples/...``, ``tools/...``)
+     exists — so renaming a module without updating the docs fails CI.
+
+Doctests embedded in the docs are NOT run here — CI runs them
+separately via ``python -m doctest docs/*.md`` (doctest.testfile treats
+the markdown as text and picks up the ``>>>`` examples).
+
+Exit status: 0 clean, 1 with a report of every broken reference.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    glob.glob(os.path.join(REPO, "docs", "*.md")))
+
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+# backticked repo-relative paths: `src/repro/core/inference.py`,
+# `tests/`, `benchmarks/bench_engine.py`, `docs/PARITY.md`, ...
+TICK_PATH = re.compile(
+    r"`((?:src|tests|docs|benchmarks|examples|tools)/[\w./\-]*)`")
+
+
+def check_file(path: str) -> list[str]:
+    errors: list[str] = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    for ln, line in enumerate(lines, 1):
+        for target in MD_LINK.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, REPO)}:{ln}: "
+                              f"broken link -> {target}")
+        for p in TICK_PATH.findall(line):
+            resolved = os.path.join(REPO, p.rstrip("/"))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, REPO)}:{ln}: "
+                              f"missing repo path -> {p}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [os.path.join(REPO, f) if not os.path.isabs(f) else f
+             for f in (argv or DEFAULT_FILES)]
+    errors: list[str] = []
+    for f in files:
+        if not os.path.exists(f):
+            errors.append(f"no such file: {f}")
+            continue
+        errors.extend(check_file(f))
+    if errors:
+        print("\n".join(errors))
+        print(f"check_docs: {len(errors)} broken reference(s)")
+        return 1
+    print(f"check_docs: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
