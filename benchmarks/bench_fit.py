@@ -1,0 +1,140 @@
+"""Training + DSE throughput: numpy oracle vs the jitted repro.fit fleet.
+
+Two grids, written to ``BENCH_fit.json`` (override with the
+BENCH_FIT_JSON env var) alongside the CSV rows:
+
+* ``fit/tree/<depth>x<k>x<n>/{numpy,jax}`` -- single-tree trainer
+  throughput (trees/s) across a depth x k x n grid, plus a
+  ``fit/forest/...`` row for the vmapped fleet (trees/s with the whole
+  fleet in one dispatch vs looping the numpy trainer);
+* ``fit/dse/{serial,batched}`` -- DSE candidate evaluation (evals/s):
+  the per-candidate ``PartitionedDT.predict`` loop vs
+  ``evaluate_batch`` scoring the whole candidate batch through the
+  jitted engine in one vmapped dispatch.
+
+``--smoke`` (CI) shrinks the grid to one point per family so the paths
+stay exercised; jit compile time is excluded by the warm-up call in
+``timed``.  Parity is not re-checked here -- ``tests/test_fit.py``
+holds the trainers bit-identical, so these rows can only differ in
+speed.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, timed, windowed
+from repro.core.dse import Config, make_splidt_evaluator
+from repro.core.tree import train_tree
+from repro.flows.windows import window_packets
+
+JSON_PATH_ENV = "BENCH_FIT_JSON"
+DEFAULT_JSON_PATH = "BENCH_fit.json"
+
+
+def _write_json(results: list[dict], mode: str) -> str:
+    import jax
+    path = os.environ.get(JSON_PATH_ENV, DEFAULT_JSON_PATH)
+    payload = {
+        "bench": "fit",
+        "mode": mode,
+        "jax_backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "cpu_count": os.cpu_count(),
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def run(quick: bool = True, smoke: bool = False):
+    from repro.fit import train_forest, train_tree_jax
+
+    rows: list[Row] = []
+    results: list[dict] = []
+
+    def add(name: str, us: float, unit_per_call: float, unit: str, **extra):
+        per_s = unit_per_call / (us / 1e6) if us > 0 else 0.0
+        derived = f"{unit}_per_s={per_s:.1f}"
+        for key, val in extra.items():
+            derived += f";{key}={val}"
+        rows.append(Row(name, us, derived))
+        results.append({"name": name, "us_per_call": round(us, 1),
+                        f"{unit}_per_s": round(per_s, 1), **extra})
+
+    rng = np.random.default_rng(0)
+    repeat = 1 if smoke else 3
+
+    # ---- single-tree trainer grid: depth x k x n --------------------
+    if smoke:
+        grid = [(4, 3, 512)]
+    elif quick:
+        grid = [(3, 2, 512), (5, 4, 2048), (7, 4, 8192)]
+    else:
+        grid = [(3, 2, 2048), (5, 4, 8192), (7, 4, 32768), (8, 6, 32768)]
+    m, C = 16, 4
+    for depth, k, n in grid:
+        X = rng.normal(size=(n, m)).astype(np.float32)
+        y = rng.integers(0, C, n)
+        kw = dict(max_depth=depth, k_features=k, n_classes=C)
+        _, us_np = timed(train_tree, X, y, repeat=repeat, **kw)
+        _, us_jx = timed(train_tree_jax, X, y, repeat=repeat, **kw)
+        tag = f"{depth}x{k}x{n}"
+        add(f"fit/tree/{tag}/numpy", us_np, 1.0, "trees",
+            depth=depth, k=k, n=n)
+        add(f"fit/tree/{tag}/jax", us_jx, 1.0, "trees",
+            depth=depth, k=k, n=n,
+            speedup_vs_numpy=round(us_np / max(us_jx, 1e-9), 2))
+
+    # ---- fleet: S subtrees in one vmapped dispatch ------------------
+    S = 4 if smoke else 16
+    depth, k, n = (4, 3, 256) if smoke else (5, 4, 1024)
+    Xs = [rng.normal(size=(n, m)).astype(np.float32) for _ in range(S)]
+    ys = [rng.integers(0, C, n) for _ in range(S)]
+    kw = dict(max_depth=depth, k_features=k, n_classes=C)
+    _, us_loop = timed(
+        lambda: [train_tree(Xf, yf, **kw) for Xf, yf in zip(Xs, ys)],
+        repeat=repeat)
+    _, us_fleet = timed(train_forest, Xs, ys, repeat=repeat, **kw)
+    add(f"fit/forest/S{S}/numpy_loop", us_loop, float(S), "trees",
+        S=S, depth=depth, k=k, n=n)
+    add(f"fit/forest/S{S}/jax_vmap", us_fleet, float(S), "trees",
+        S=S, depth=depth, k=k, n=n,
+        speedup_vs_loop=round(us_loop / max(us_fleet, 1e-9), 2))
+
+    # ---- DSE evaluation: serial predict loop vs one batched dispatch
+    n_flows = 400 if smoke else 2500
+    ds, tr, te = dataset("d2", n_flows=n_flows)
+    P = 3
+    Xw_tr, Xw_te = windowed("d2", P, n_flows=n_flows)
+    wp_te = window_packets(te, P)
+    batch = 16                            # paper: 16 parallel evaluations
+    cfgs = [Config(int(rng.integers(2, 5)),
+                   tuple(int(d) for d in rng.integers(
+                       2, 4, int(rng.integers(1, P + 1)))))
+            for _ in range(batch)]
+    kw = dict(n_classes=ds.n_classes, flows=100_000)
+    ev_serial = make_splidt_evaluator(Xw_tr, tr.labels, Xw_te, te.labels,
+                                      **kw)
+    ev_batched = make_splidt_evaluator(Xw_tr, tr.labels, Xw_te, te.labels,
+                                       trainer="jax", win_pkts_te=wp_te,
+                                       **kw)
+    _, us_serial = timed(lambda: [ev_serial(c) for c in cfgs], repeat=repeat)
+    _, us_batched = timed(ev_batched.evaluate_batch, cfgs, repeat=repeat)
+    add("fit/dse/serial", us_serial, float(batch), "evals", batch=batch,
+        predict_dispatches_per_round=batch)
+    # the whole candidate batch is scored by ONE vmapped partition walk
+    # (fit.batched.fleet_predict); training remains P fleet dispatches
+    # per candidate
+    add("fit/dse/batched", us_batched, float(batch), "evals", batch=batch,
+        predict_dispatches_per_round=1,
+        speedup_vs_serial=round(us_serial / max(us_batched, 1e-9), 2))
+
+    path = _write_json(results, "smoke" if smoke else
+                       ("quick" if quick else "full"))
+    rows.append(Row("fit/json", 0.0, f"path={path};rows={len(results)}"))
+    return rows

@@ -11,6 +11,7 @@ Modules map to the paper's tables/figures:
     bench_dse         — Fig 7 (BO convergence), Table 4 (stage timing)
     bench_kernels     — kernel micro-benchmarks
     bench_engine      — looped vs fused vs streaming engine throughput
+    bench_fit         — numpy vs jitted trainer, serial vs batched DSE
     bench_roofline    — EXPERIMENTS.md §Roofline table (from dry-run)
 
 ``--smoke`` is the CI guard: every module must import, and modules with
@@ -25,7 +26,7 @@ import time
 import traceback
 
 MODULES = ["pareto", "resources", "recirc_ttd", "dse", "kernels", "engine",
-           "roofline"]
+           "fit", "roofline"]
 
 
 def main() -> None:

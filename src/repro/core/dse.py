@@ -143,29 +143,60 @@ def make_splidt_evaluator(
     bits: int = 32,
     env_name: str = "HD",
     feature_ranges: dict[int, tuple[float, float]] | None = None,
+    trainer: str = "numpy",
+    win_pkts_te: np.ndarray | None = None,
 ) -> Callable[[Config], Evaluation]:
     """The paper's per-configuration pipeline: train (Algorithm 1) ->
-    evaluate F1 -> generate rules -> resource/feasibility check."""
+    evaluate F1 -> generate rules -> resource/feasibility check.
+
+    ``trainer`` selects the subtree grower passed through to
+    :func:`train_partitioned_dt` (``"numpy"`` or the jitted ``"jax"``
+    fleet -- structurally identical models either way).
+
+    ``win_pkts_te``: optional window-*packet* tensor for the test split
+    (``flows.windows.window_packets`` over the same window count as
+    ``Xw_te``).  When given, the returned evaluator grows an
+    ``evaluate_batch`` attribute that scores a whole candidate batch
+    through the jitted engine in ONE vmapped dispatch
+    (``repro.fit.batched.fleet_predict``); :func:`bayes_search` picks
+    it up automatically.  Labels are bit-identical to
+    ``PartitionedDT.predict`` (docs/PARITY.md), so serial and batched
+    evaluation produce the same ``Evaluation``s.
+    """
 
     env = ENVIRONMENTS[env_name]
 
-    def evaluate(cfg: Config) -> Evaluation:
+    def _train(cfg: Config, max_dep):
         if cfg.n_partitions > Xw_tr.shape[1]:
             raise ValueError("config needs more windows than the dataset has")
+        return train_partitioned_dt(
+            Xw_tr[:, :cfg.n_partitions], y_tr,
+            partition_sizes=list(cfg.partition_sizes), k=cfg.k,
+            n_classes=n_classes, max_dep_depth=max_dep, trainer=trainer)
 
+    def _finish(pdt, pred, recircs):
+        f1 = macro_f1(y_te, pred, n_classes)
+        bw = recirc_bandwidth(recircs, flows, env)
+        rep = estimate(pdt, target=target, bits=bits, flows=flows,
+                       recirc_mbps=bw.mean_mbps,
+                       feature_ranges=feature_ranges)
+        return pdt, f1, bw, rep
+
+    def _evaluation(cfg, pdt, f1, bw, rep) -> Evaluation:
+        return Evaluation(
+            config=cfg, f1=f1, feasible=rep.feasible,
+            flow_capacity=rep.flow_capacity, tcam_entries=rep.tcam_entries,
+            register_bits=rep.register_bits_per_flow,
+            recirc_mbps=bw.mean_mbps, n_subtrees=len(pdt.subtrees),
+            unique_features=len(pdt.unique_features()),
+        )
+
+    def evaluate(cfg: Config) -> Evaluation:
         def attempt(max_dep):
-            pdt = train_partitioned_dt(
-                Xw_tr[:, :cfg.n_partitions], y_tr,
-                partition_sizes=list(cfg.partition_sizes), k=cfg.k,
-                n_classes=n_classes, max_dep_depth=max_dep)
+            pdt = _train(cfg, max_dep)
             pred, recircs, _ = pdt.predict(Xw_te[:, :cfg.n_partitions],
                                            return_trace=True)
-            f1 = macro_f1(y_te, pred, n_classes)
-            bw = recirc_bandwidth(recircs, flows, env)
-            rep = estimate(pdt, target=target, bits=bits, flows=flows,
-                           recirc_mbps=bw.mean_mbps,
-                           feature_ranges=feature_ranges)
-            return pdt, f1, bw, rep
+            return _finish(pdt, pred, recircs)
 
         pdt, f1, bw, rep = attempt(None)
         if not rep.feasible and pdt.dep_depth() > 0:
@@ -174,13 +205,37 @@ def make_splidt_evaluator(
             pdt2, f12, bw2, rep2 = attempt(0)
             if rep2.feasible:
                 pdt, f1, bw, rep = pdt2, f12, bw2, rep2
-        return Evaluation(
-            config=cfg, f1=f1, feasible=rep.feasible,
-            flow_capacity=rep.flow_capacity, tcam_entries=rep.tcam_entries,
-            register_bits=rep.register_bits_per_flow,
-            recirc_mbps=bw.mean_mbps, n_subtrees=len(pdt.subtrees),
-            unique_features=len(pdt.unique_features()),
-        )
+        return _evaluation(cfg, pdt, f1, bw, rep)
+
+    if win_pkts_te is not None:
+
+        def _attempt_batch(cfgs: list[Config], max_deps: list):
+            """Train each config, then score ALL of them in one
+            vmapped engine dispatch."""
+            from repro.fit.batched import fleet_predict
+            pdts = [_train(c, d) for c, d in zip(cfgs, max_deps)]
+            P = max(p.n_partitions for p in pdts)
+            labels, recircs, _ = fleet_predict(pdts, win_pkts_te[:, :P])
+            return [_finish(p, labels[i], recircs[i])
+                    for i, p in enumerate(pdts)]
+
+        def evaluate_batch(cfgs: list[Config]) -> list[Evaluation]:
+            if not cfgs:
+                return []
+            results = _attempt_batch(cfgs, [None] * len(cfgs))
+            # feasibility fallback, batched the same way: retrain the
+            # dependency-bound failures on dependency-free features
+            redo = [i for i, (pdt, _, _, rep) in enumerate(results)
+                    if not rep.feasible and pdt.dep_depth() > 0]
+            if redo:
+                retried = _attempt_batch([cfgs[i] for i in redo],
+                                         [0] * len(redo))
+                for i, res2 in zip(redo, retried):
+                    if res2[3].feasible:
+                        results[i] = res2
+            return [_evaluation(c, *res) for c, res in zip(cfgs, results)]
+
+        evaluate.evaluate_batch = evaluate_batch
 
     return evaluate
 
@@ -212,20 +267,56 @@ def bayes_search(
     n_init: int = 8,
     n_candidates: int = 256,
     seed: int = 0,
+    evaluate_batch: Callable[[list[Config]], list[Evaluation]] | None = None,
 ) -> BOResult:
-    """BO loop: GP surrogate on F1, GP feasibility model, EI acquisition."""
+    """BO loop: GP surrogate on F1, GP feasibility model, EI acquisition.
+
+    Each iteration proposes exactly ``batch`` *unseen* configs: the
+    acquisition ranking is walked past the top-``batch`` entries to
+    replace duplicates, topping up with fresh random samples if the
+    whole candidate pool is exhausted (historically an iteration could
+    silently evaluate fewer than ``batch`` -- or zero -- candidates
+    when sampling collided with ``seen``).
+
+    ``evaluate_batch`` (or an ``evaluate_batch`` attribute on
+    ``evaluate``, as produced by :func:`make_splidt_evaluator` with
+    ``win_pkts_te=``) scores each proposal batch in one call -- the
+    paper's 16 parallel evaluations -- instead of looping
+    ``evaluate`` per candidate.  History order (and therefore the GP
+    state, the RNG stream, and ``BOResult``) is identical either way.
+    """
     rng = np.random.default_rng(seed)
     history: list[Evaluation] = []
     seen: set[Config] = set()
+    if evaluate_batch is None:
+        evaluate_batch = getattr(evaluate, "evaluate_batch", None)
 
-    def run(cfg: Config):
-        if cfg in seen:
-            return
-        seen.add(cfg)
-        history.append(evaluate(cfg))
+    def pick_fresh(ranked: list[Config], want: int) -> list[Config]:
+        """First ``want`` unseen configs off the ranking; top up with
+        random draws (bounded) when the ranking runs dry."""
+        picked: list[Config] = []
+        for c in ranked:
+            if c in seen or c in picked:
+                continue
+            picked.append(c)
+            if len(picked) == want:
+                return picked
+        for _ in range(50 * max(want, 1)):
+            if len(picked) == want:
+                break
+            c = space.sample(rng)
+            if c not in seen and c not in picked:
+                picked.append(c)
+        return picked
 
-    for _ in range(n_init):
-        run(space.sample(rng))
+    def run_batch(cfgs: list[Config]):
+        seen.update(cfgs)
+        if evaluate_batch is not None:
+            history.extend(evaluate_batch(cfgs))
+        else:
+            history.extend(evaluate(c) for c in cfgs)
+
+    run_batch(pick_fresh([space.sample(rng) for _ in range(n_init)], n_init))
 
     for _ in range(n_iterations):
         X = np.stack([space.encode(e.config) for e in history])
@@ -236,14 +327,12 @@ def bayes_search(
         best = float(y.max(initial=0.0))
 
         cands = [space.sample(rng) for _ in range(n_candidates)]
-        cands = [c for c in cands if c not in seen] or [space.sample(rng)]
         Xc = np.stack([space.encode(c) for c in cands])
         mu, sd = gp_f1.predict(Xc)
         pf, _ = gp_feas.predict(Xc)
         acq = expected_improvement(mu, sd, best) * np.clip(pf, 0.05, 1.0)
         order = np.argsort(acq)[::-1]
-        for i in order[:batch]:
-            run(cands[int(i)])
+        run_batch(pick_fresh([cands[int(i)] for i in order], batch))
 
     feas_hist = [e for e in history if e.feasible]
     best_eval = max(feas_hist, key=lambda e: e.f1, default=None)

@@ -8,10 +8,13 @@ so on.  Every subtree uses at most ``k`` distinct features -- the
 register budget that the data plane time-shares across partitions via
 recirculation.
 
-Training follows the paper's Algorithm 1: recursive per-leaf training on
-exactly the samples that reach the leaf, using the *next* window's
-features -- so subtrees specialise to the traffic distribution they will
-actually observe at inference time.
+Training follows the paper's Algorithm 1: per-leaf training on exactly
+the samples that reach the leaf, using the *next* window's features --
+so subtrees specialise to the traffic distribution they will actually
+observe at inference time.  Growth is partition-major (level order):
+all of partition p's subtrees train before partition p+1's, which is
+what lets ``trainer="jax"`` train each partition's whole subtree fleet
+as one vmapped dispatch (``repro.fit``).
 """
 from __future__ import annotations
 
@@ -147,8 +150,10 @@ def train_partitioned_dt(
     min_samples_leaf: int = 2,
     max_bins: int = tree_lib.MAX_BINS,
     max_dep_depth: int | None = None,
+    trainer: str = "numpy",
 ) -> PartitionedDT:
-    """Paper Algorithm 1: recursive per-leaf subtree training.
+    """Paper Algorithm 1: per-leaf subtree training, one partition level
+    at a time.
 
     ``X_windows``: (n, p, N) features per window; ``partition_sizes``:
     depth of each partition's subtrees; ``k``: distinct-feature budget
@@ -156,11 +161,26 @@ def train_partitioned_dt(
     those whose dependency chain fits the register budget (the DSE sets
     this at high flow targets, where dependency registers are the
     binding constraint).
+
+    ``trainer`` selects the subtree grower:
+
+    * ``"numpy"`` -- the host CART oracle (:func:`repro.core.tree.train_tree`),
+      one subtree at a time;
+    * ``"jax"``   -- the jitted level-synchronous histogram grower
+      (``repro.fit``): each partition's subtree fleet trains as ONE
+      vmapped dispatch, structurally identical to the numpy trees
+      node-for-node (the contract in ``repro.core.tree``).
+
+    SIDs are assigned in partition-major level order (partition 0's
+    subtree, then partition 1's subtrees in the order their parent
+    leaves appear, ...) so both trainers number subtrees identically.
     """
     n, p_avail, N = X_windows.shape
     p = len(partition_sizes)
     if p > p_avail:
         raise ValueError(f"need {p} windows, dataset has {p_avail}")
+    if trainer not in ("numpy", "jax"):
+        raise ValueError(f"unknown trainer {trainer!r}; options: numpy, jax")
     y = np.asarray(y, dtype=np.int64)
     C = int(n_classes if n_classes is not None else y.max() + 1)
     allowed = None
@@ -171,37 +191,55 @@ def train_partitioned_dt(
 
     subtrees: list[SubTree] = []
 
-    def train_rec(rows: np.ndarray, partition: int) -> int:
-        """Train the subtree for ``rows`` at ``partition``; returns SID."""
+    # frontier entry: (rows, parent_sid, parent_leaf); partition 0 has a
+    # single root subtree with no parent
+    frontier: list[tuple[np.ndarray, int, int]] = [(np.arange(n), -1, -1)]
+    for partition in range(p):
+        if not frontier:
+            break
         depth = int(partition_sizes[partition])
-        t = train_tree(
-            X_windows[rows, partition, :], y[rows],
-            max_depth=depth, k_features=k, n_classes=C,
-            min_samples_leaf=min_samples_leaf, max_bins=max_bins,
-            allowed_features=allowed,
-        )
-        sid = len(subtrees)
-        st = SubTree(sid=sid, partition=partition, tree=t,
-                     leaf_next_sid={}, leaf_label={})
-        subtrees.append(st)
+        fleet_X = [X_windows[rows, partition, :] for rows, _, _ in frontier]
+        fleet_y = [y[rows] for rows, _, _ in frontier]
+        if trainer == "jax":
+            from repro.fit import train_forest
+            trees = train_forest(
+                fleet_X, fleet_y, max_depth=depth, k_features=k,
+                n_classes=C, min_samples_leaf=min_samples_leaf,
+                max_bins=max_bins, allowed_features=allowed)
+        else:
+            trees = [train_tree(Xs, ys, max_depth=depth, k_features=k,
+                                n_classes=C,
+                                min_samples_leaf=min_samples_leaf,
+                                max_bins=max_bins, allowed_features=allowed)
+                     for Xs, ys in zip(fleet_X, fleet_y)]
 
-        leaves = t.apply(X_windows[rows, partition, :])
-        leaf_ids = np.nonzero(t.feature < 0)[0]
-        for leaf in leaf_ids:
-            leaf = int(leaf)
-            st.leaf_label[leaf] = int(t.value[leaf].argmax())
-            subset = rows[leaves == leaf]
-            counts = t.value[leaf]
-            pure = (counts > 0).sum() <= 1
-            last = partition + 1 >= p
-            # early exit: last partition, pure leaf, or too few samples
-            if last or pure or subset.shape[0] < min_samples_subtree:
-                st.leaf_next_sid[leaf] = EXIT
-            else:
-                st.leaf_next_sid[leaf] = train_rec(subset, partition + 1)
-        return sid
+        next_frontier: list[tuple[np.ndarray, int, int]] = []
+        last = partition + 1 >= p
+        for (rows, parent_sid, parent_leaf), Xs, t in zip(
+                frontier, fleet_X, trees):
+            sid = len(subtrees)
+            st = SubTree(sid=sid, partition=partition, tree=t,
+                         leaf_next_sid={}, leaf_label={})
+            subtrees.append(st)
+            if parent_sid >= 0:
+                subtrees[parent_sid].leaf_next_sid[parent_leaf] = sid
 
-    train_rec(np.arange(n), 0)
+            leaves = t.apply(Xs)
+            leaf_ids = np.nonzero(t.feature < 0)[0]
+            for leaf in leaf_ids:
+                leaf = int(leaf)
+                st.leaf_label[leaf] = int(t.value[leaf].argmax())
+                subset = rows[leaves == leaf]
+                counts = t.value[leaf]
+                pure = (counts > 0).sum() <= 1
+                # early exit: last partition, pure leaf, or too few samples
+                if last or pure or subset.shape[0] < min_samples_subtree:
+                    st.leaf_next_sid[leaf] = EXIT
+                else:
+                    # SID filled in when the child trains next level
+                    next_frontier.append((subset, sid, leaf))
+        frontier = next_frontier
+
     return PartitionedDT(
         subtrees=subtrees, partition_sizes=list(partition_sizes), k=k,
         n_classes=C, n_features=N,

@@ -5,14 +5,47 @@ implemented from scratch: quantile-binned features + per-node class
 histograms, Gini-gain splits, and -- the SpliDT-specific part -- a hard
 budget of at most ``k`` *distinct* features per tree (paper §2.2
 "feature density": every subtree must fit in the k feature-register
-slots).  Once a branch has consumed k distinct features, further splits
-on that branch may only reuse those features.
+slots).  Once the tree has consumed k distinct features, further splits
+may only reuse those features.
 
 The tree is stored as flat arrays so it can be packed for the JAX/Pallas
 engine (``core/tables.py``).
+
+Cross-trainer contract
+----------------------
+This module is the **oracle** for ``repro.fit`` (the jitted
+level-synchronous grower).  Both trainers must produce *structurally
+identical* trees -- same ``feature``/``threshold``/``left``/``right``/
+``value`` arrays -- so DSE results are reproducible whichever trainer
+ran them.  The contract, stated once here and mirrored exactly in
+``repro.fit.hist``:
+
+1. **Binning**: :func:`quantile_bins` + :func:`bin_data`.  Bin ``b``
+   for feature ``j`` means ``edges[j][b-1] < x <= edges[j][b]``
+   (``np.searchsorted(edges, x, side="left")``), so the split
+   "bins [0..e] go left" is exactly ``x <= edges[j][e]`` on raw values.
+2. **Scoring**: :func:`split_scores` / :func:`node_impurity` -- the
+   weighted-Gini child impurity evaluated in **float32** with the
+   class-axis reduction pinned to a left-to-right chain
+   (:func:`class_sq_chain`).  Integer counts below 2**24 are exact in
+   f32 and IEEE-754 +,-,*,/ round identically in numpy and XLA, so the
+   two trainers compare *the same bits*.
+3. **Tie-break**: within a feature, the lowest bin index among minimal
+   child impurities (first ``argmin``); across features, the lowest
+   feature index among maximal gains (first ``argmax``).  A split must
+   *strictly* beat ``min_gain`` (compared in f32).
+4. **Growth order**: level-synchronous (BFS).  Nodes are numbered in
+   level order, left child before right; the greedy tree-wide
+   ``k_features`` budget admits new features in that same order --
+   the budget state a node sees is the state after every node above it
+   and to its left has been decided.
+
+``docs/PARITY.md`` states the contract for reviewers; the zero-tolerance
+structural-parity property tests live in ``tests/test_fit.py``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -26,7 +59,9 @@ class Tree:
 
     Node 0 is the root.  For internal nodes ``feature/threshold`` define
     ``x[feature] <= threshold -> left else right``.  Leaves have
-    ``feature == -1`` and carry a class distribution.
+    ``feature == -1`` and carry a class distribution.  Nodes are
+    numbered in level (BFS) order, left before right, so parents always
+    precede children.
     """
 
     feature: np.ndarray      # (n_nodes,) int32, -1 for leaf
@@ -89,7 +124,10 @@ class Tree:
         return self.value[self.apply(X)].argmax(axis=1)
 
 
-def _quantile_bins(X: np.ndarray, max_bins: int) -> list[np.ndarray]:
+# ---------------------------------------------------------------------------
+# binning (contract item 1)
+# ---------------------------------------------------------------------------
+def quantile_bins(X: np.ndarray, max_bins: int) -> list[np.ndarray]:
     """Per-feature ascending candidate thresholds (bin edges)."""
     edges = []
     qs = np.linspace(0, 1, max_bins + 1)[1:-1]
@@ -100,9 +138,9 @@ def _quantile_bins(X: np.ndarray, max_bins: int) -> list[np.ndarray]:
     return edges
 
 
-def _bin_data(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
-    """Map raw features to bin ids: bin b means value <= edges[b] fails for
-    all earlier edges; i.e. ``np.searchsorted(edges, x, 'left')``."""
+def bin_data(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
+    """Map raw features to bin ids: ``np.searchsorted(edges, x, 'left')``,
+    so ``bin(x) <= e  <=>  x <= edges[e]`` exactly."""
     n, m = X.shape
     B = np.empty((n, m), dtype=np.int16)
     for j in range(m):
@@ -110,39 +148,60 @@ def _bin_data(X: np.ndarray, edges: list[np.ndarray]) -> np.ndarray:
     return B
 
 
-def _gini_gain_curves(hist: np.ndarray, total: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Best split position & impurity decrease for one feature.
+# PR-4-era private names, kept for external callers
+_quantile_bins = quantile_bins
+_bin_data = bin_data
 
-    ``hist``: (n_bins, n_classes) class counts per bin; ``total``:
-    (n_classes,).  Split at edge e sends bins [0..e] left.  Returns
-    (best_edge_index, best_gain); gain is -inf if no valid split.
+
+# ---------------------------------------------------------------------------
+# split scoring (contract items 2-3) -- mirrored by repro.fit.hist
+# ---------------------------------------------------------------------------
+def class_sq_chain(counts: np.ndarray) -> np.ndarray:
+    """Left-to-right f32 chain of squared class counts over the last axis.
+
+    The ONLY reduction in the split score whose order matters: f32
+    addition is not associative, so the chain is pinned (the trainer
+    analogue of ``kernels.ref.ordered_wsum``).  ``counts`` is integer
+    (exact in f32 below 2**24); the result is the ``sum_c counts[c]^2``
+    term of the Gini impurity.
     """
-    cum = np.cumsum(hist, axis=0)            # (n_bins, C) left counts
-    nl = cum.sum(axis=1)                      # (n_bins,)
-    n = total.sum()
+    acc = np.zeros(counts.shape[:-1], dtype=np.float32)
+    for c in range(counts.shape[-1]):
+        x = counts[..., c].astype(np.float32)
+        acc = acc + x * x
+    return acc
+
+
+def split_scores(hist: np.ndarray, total: np.ndarray) -> np.ndarray:
+    """Weighted-Gini child impurity per split edge for one node×feature.
+
+    ``hist``: (n_bins, n_classes) integer class counts per bin;
+    ``total``: (n_classes,) node class counts.  Splitting at edge ``e``
+    sends bins ``[0..e]`` left.  Returns (n_bins,) f32 child impurity,
+    ``+inf`` where a side would be empty.  Lower is better; the parent
+    impurity (:func:`node_impurity`) is a per-node constant, so
+    ``gain = parent - child``.
+    """
+    cum = np.cumsum(hist.astype(np.int64), axis=0)      # (n_bins, C) left
+    nl = cum.sum(axis=1)                                # (n_bins,)
+    n = int(total.sum())
     nr = n - nl
-    valid = (nl > 0) & (nr > 0)
-    # weighted Gini of children; parent impurity constant per node
-    sl = (cum.astype(np.float64) ** 2).sum(axis=1)
-    right = total[None, :] - cum
-    sr = (right.astype(np.float64) ** 2).sum(axis=1)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        child = (nl - sl / np.maximum(nl, 1)) + (nr - sr / np.maximum(nr, 1))
-    child = np.where(valid, child, np.inf)
-    e = int(np.argmin(child))
-    if not valid[e]:
-        return -1, -np.inf
-    parent = n - (total.astype(np.float64) ** 2).sum() / max(n, 1)
-    return e, float(parent - child[e])
+    sl = class_sq_chain(cum)
+    sr = class_sq_chain(total[None, :].astype(np.int64) - cum)
+    nl_f = nl.astype(np.float32)
+    nr_f = nr.astype(np.float32)
+    one = np.float32(1.0)
+    child = ((nl_f - sl / np.maximum(nl_f, one))
+             + (nr_f - sr / np.maximum(nr_f, one)))
+    return np.where((nl > 0) & (nr > 0), child,
+                    np.float32(np.inf)).astype(np.float32)
 
 
-@dataclasses.dataclass
-class _BuildNode:
-    rows: np.ndarray
-    depth: int
-    used: frozenset
-    parent: int
-    is_left: bool
+def node_impurity(total: np.ndarray) -> np.float32:
+    """f32 Gini "impurity mass" ``n - (sum_c total_c^2) / n`` of a node."""
+    n_f = np.float32(int(total.sum()))
+    st = class_sq_chain(np.asarray(total, dtype=np.int64))
+    return np.float32(n_f - st / np.maximum(n_f, np.float32(1.0)))
 
 
 def train_tree(
@@ -156,27 +215,34 @@ def train_tree(
     min_samples_leaf: int = 4,
     min_gain: float = 1e-7,
     max_bins: int = MAX_BINS,
-    rng: np.random.Generator | None = None,
 ) -> Tree:
     """Train a CART tree with an optional distinct-feature budget.
 
-    ``k_features``: max distinct features on any root-to-leaf path *and*
-    in the whole tree (SpliDT subtree register budget).  Enforced
-    greedily: after k distinct features have been used anywhere in the
-    tree, only those features remain candidates.  ``allowed_features``
-    restricts candidates up-front (used for the top-k baselines).
+    ``k_features``: max distinct features in the whole tree (SpliDT
+    subtree register budget), enforced greedily in level order: once k
+    distinct features have been used anywhere in the tree, only those
+    features remain candidates.  ``allowed_features`` restricts
+    candidates up-front (used for the top-k baselines).
+
+    Fully deterministic -- no RNG is consumed anywhere.  Tie-break (the
+    cross-trainer contract with ``repro.fit``; see the module
+    docstring): within a feature the lowest bin index wins, across
+    features the lowest feature index wins, and both trainers evaluate
+    the f32 :func:`split_scores` so the comparisons see identical bits.
     """
     X = np.asarray(X, dtype=np.float32)
     y = np.asarray(y, dtype=np.int64)
     n, m = X.shape
     C = int(n_classes if n_classes is not None else y.max() + 1)
+    allowed_mask = np.zeros(m, dtype=bool)
     if allowed_features is None:
-        allowed = np.arange(m)
+        allowed_mask[:] = True
     else:
-        allowed = np.asarray(allowed_features, dtype=np.int64)
+        allowed_mask[np.asarray(allowed_features, dtype=np.int64)] = True
 
-    edges = _quantile_bins(X, max_bins)
-    B = _bin_data(X, edges)
+    edges = quantile_bins(X, max_bins)
+    B = bin_data(X, edges)
+    min_gain32 = np.float32(min_gain)
 
     feature: list[int] = []
     threshold: list[float] = []
@@ -192,65 +258,65 @@ def train_tree(
         value.append(np.zeros(C, dtype=np.float32))
         return len(feature) - 1
 
-    # global distinct-feature budget, grown greedily as the tree is built
-    tree_used: set[int] = set()
+    # global distinct-feature budget, grown greedily in level order
+    used_mask = np.zeros(m, dtype=bool)
 
-    stack = [_BuildNode(np.arange(n), 0, frozenset(), -1, False)]
-    root = None
-    while stack:
-        nd = stack.pop()
+    # BFS frontier: (rows, depth, parent, is_left).  FIFO order = level
+    # order, left before right -- node ids and budget-acquisition order
+    # both follow it (contract item 4).
+    queue = collections.deque([(np.arange(n), 0, -1, False)])
+    while queue:
+        rows, depth, parent, is_left = queue.popleft()
         node_id = new_node()
-        if root is None:
-            root = node_id
-        if nd.parent >= 0:
-            if nd.is_left:
-                left[nd.parent] = node_id
+        if parent >= 0:
+            if is_left:
+                left[parent] = node_id
             else:
-                right[nd.parent] = node_id
-        rows = nd.rows
-        counts = np.bincount(y[rows], minlength=C).astype(np.float32)
-        value[node_id] = counts
-        pure = (counts > 0).sum() <= 1
-        if nd.depth >= max_depth or pure or rows.shape[0] < 2 * min_samples_leaf:
+                right[parent] = node_id
+        yb = y[rows]
+        total = np.bincount(yb, minlength=C).astype(np.int64)
+        value[node_id] = total.astype(np.float32)
+        n_node = rows.shape[0]
+        pure = (total > 0).sum() <= 1
+        if depth >= max_depth or pure or n_node < 2 * min_samples_leaf:
             continue
 
         # candidate features under the budget
-        if k_features is not None and len(tree_used) >= k_features:
-            cand = np.asarray(sorted(tree_used), dtype=np.int64)
-        else:
-            cand = allowed
-        cand = cand[[len(edges[int(j)]) > 0 for j in cand]]
-        if cand.size == 0:
-            continue
+        budget_open = (k_features is None
+                       or int(used_mask.sum()) < k_features)
+        cand_mask = allowed_mask if budget_open else (allowed_mask & used_mask)
 
-        yb = y[rows]
-        total = np.bincount(yb, minlength=C).astype(np.int64)
-        best = (-np.inf, -1, -1)  # gain, feature, edge
-        for j in cand:
+        parent_imp = node_impurity(total)
+        gains = np.full(m, -np.inf, dtype=np.float32)
+        best_bin = np.zeros(m, dtype=np.int64)
+        best_nl = np.zeros(m, dtype=np.int64)
+        for j in np.nonzero(cand_mask)[0]:
             j = int(j)
             nb = len(edges[j]) + 1
             bj = B[rows, j].astype(np.int64)
             hist = np.zeros((nb, C), dtype=np.int64)
             np.add.at(hist, (bj, yb), 1)
-            e, gain = _gini_gain_curves(hist, total)
-            if gain > best[0]:
-                best = (gain, j, e)
-        gain, j, e = best
-        if j < 0 or gain <= min_gain:
+            child = split_scores(hist, total)
+            e = int(np.argmin(child))               # first min: lowest bin
+            gains[j] = parent_imp - child[e]        # -inf when child is inf
+            best_bin[j] = e
+            best_nl[j] = hist[:e + 1].sum()
+        j = int(np.argmax(gains))                   # first max: lowest feature
+        gain = gains[j]
+        if not (gain > min_gain32):
+            continue
+        e = int(best_bin[j])
+        nl = int(best_nl[j])
+        if nl < min_samples_leaf or n_node - nl < min_samples_leaf:
             continue
         thr = float(edges[j][e])
-        go_left = X[rows, j] <= thr
-        nl = int(go_left.sum())
-        if nl < min_samples_leaf or rows.shape[0] - nl < min_samples_leaf:
-            continue
+        go_left = X[rows, j] <= thr                 # == (bin <= e), exactly
 
         feature[node_id] = j
         threshold[node_id] = thr
-        tree_used.add(j)
-        used = nd.used | {j}
-        # push right first so left is materialised first (stable ids)
-        stack.append(_BuildNode(rows[~go_left], nd.depth + 1, used, node_id, False))
-        stack.append(_BuildNode(rows[go_left], nd.depth + 1, used, node_id, True))
+        used_mask[j] = True
+        queue.append((rows[go_left], depth + 1, node_id, True))
+        queue.append((rows[~go_left], depth + 1, node_id, False))
 
     return Tree(
         feature=np.asarray(feature, dtype=np.int32),
@@ -289,15 +355,30 @@ def feature_importance(X: np.ndarray, y: np.ndarray, *, max_depth: int = 12,
 
 
 def macro_f1(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int) -> float:
-    """Macro-averaged F1 (paper's headline metric)."""
-    f1s = []
-    for c in range(n_classes):
-        tp = int(((y_pred == c) & (y_true == c)).sum())
-        fp = int(((y_pred == c) & (y_true != c)).sum())
-        fn = int(((y_pred != c) & (y_true == c)).sum())
-        if tp + fp + fn == 0:
-            continue
-        prec = tp / (tp + fp) if tp + fp else 0.0
-        rec = tp / (tp + fn) if tp + fn else 0.0
-        f1s.append(0.0 if prec + rec == 0 else 2 * prec * rec / (prec + rec))
-    return float(np.mean(f1s)) if f1s else 0.0
+    """Macro-averaged F1 (paper's headline metric).
+
+    Vectorised -- one ``np.bincount`` over the joint (true, pred) index
+    builds the whole confusion matrix; it sits on the DSE hot path (one
+    call per candidate evaluation).  Out-of-range predictions (e.g. the
+    engine's ``-1`` non-termination sentinel) fall into an overflow bin:
+    they are a false negative for their true class and a true positive
+    for nothing, exactly as the per-class loop scored them.
+    """
+    yt = np.asarray(y_true, dtype=np.int64).ravel()
+    yp = np.asarray(y_pred, dtype=np.int64).ravel()
+    C = int(n_classes)
+    t = np.where((yt >= 0) & (yt < C), yt, C)
+    p = np.where((yp >= 0) & (yp < C), yp, C)
+    cm = np.bincount(t * (C + 1) + p,
+                     minlength=(C + 1) ** 2).reshape(C + 1, C + 1)
+    tp = np.diag(cm)[:C].astype(np.float64)
+    fp = cm[:, :C].sum(axis=0) - np.diag(cm)[:C]
+    fn = cm[:C, :].sum(axis=1) - np.diag(cm)[:C]
+    seen = (tp + fp + fn) > 0
+    if not seen.any():
+        return 0.0
+    with np.errstate(divide="ignore", invalid="ignore"):
+        prec = np.where(tp + fp > 0, tp / (tp + fp), 0.0)
+        rec = np.where(tp + fn > 0, tp / (tp + fn), 0.0)
+        f1 = np.where(prec + rec > 0, 2 * prec * rec / (prec + rec), 0.0)
+    return float(np.mean(f1[seen]))

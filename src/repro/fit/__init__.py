@@ -1,0 +1,26 @@
+"""repro.fit -- jitted batched tree induction + batched DSE evaluation.
+
+The training half of SpliDT on the accelerator: a level-synchronous
+histogram grower (``hist``: binning -> per-node class histograms ->
+``lax.scan`` over depth on a fixed node arena), the in-jit k-distinct-
+feature register budget (``kbudget``), and the ``vmap`` fleets
+(``batched``: whole-partition subtree fleets for
+``train_partitioned_dt(trainer="jax")``, and whole-candidate-batch
+scoring for ``core.dse.bayes_search``).
+
+Structurally identical to the numpy oracle (``core.tree.train_tree``)
+node-for-node -- the shared contract (binning, f32 split scores,
+tie-breaks, level-order greedy budget) is stated in ``core/tree.py``
+and enforced zero-tolerance by ``tests/test_fit.py``.
+"""
+from repro.fit.batched import (
+    fleet_predict, pack_model_fleet, train_forest, train_tree_jax,
+)
+from repro.fit.hist import arena_to_tree, grow_arena, grow_forest_arenas
+from repro.fit.kbudget import budget_level, distinct_feature_count
+
+__all__ = [
+    "arena_to_tree", "budget_level", "distinct_feature_count",
+    "fleet_predict", "grow_arena", "grow_forest_arenas",
+    "pack_model_fleet", "train_forest", "train_tree_jax",
+]

@@ -1,0 +1,244 @@
+"""Batched training + batched DSE scoring (the ``vmap`` layer of repro.fit).
+
+Two fleets live here:
+
+* **subtree fleets** -- :func:`train_forest` stacks the subsets a
+  partition's subtrees train on (padded to a common capacity, inert
+  rows masked) and runs the jitted level-synchronous grower
+  (``repro.fit.hist``) once, ``vmap``'d over the subtree axis.
+  ``train_partitioned_dt(trainer="jax")`` calls it once per partition,
+  so Algorithm 1 becomes P dispatches instead of one Python-loop tree
+  at a time.
+* **DSE candidate fleets** -- :func:`fleet_predict` packs a *batch* of
+  trained :class:`PartitionedDT` models into one stacked
+  ``DeviceTables`` (padded to the batch's max S/k/T/L, exit actions
+  re-encoded for the shared subtree count) and scores all of them
+  against the test flows in ONE jitted, ``vmap``-over-models partition
+  walk -- the same ``fused_step`` engine the serving path runs, so the
+  labels are bit-identical to ``PartitionedDT.predict`` and the
+  per-candidate Python evaluation loop disappears from
+  ``core.dse.bayes_search``.
+
+Padding safety: padded subtrees are never reached (SIDs stay
+model-local), padded threshold slots are ``+inf`` (mark 0, wildcard
+leaf intervals), padded leaves are ``valid=0``, and extra partitions
+walk flows that have all exited (trained models exit every flow by
+their last partition), so verdicts and recirculation counts match the
+serial engine exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import MAX_BINS, Tree
+from repro.fit import hist
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# subtree fleets
+# ---------------------------------------------------------------------------
+# per-level histogram elements allowed per grower dispatch; fleets whose
+# (S, 2**(d-1), m, nbins, C) working set exceeds it run in chunks
+_HIST_BUDGET = 16_000_000
+
+
+def train_forest(
+    Xs: list[np.ndarray],
+    ys: list[np.ndarray],
+    *,
+    max_depth: int,
+    k_features: int | None = None,
+    n_classes: int,
+    min_samples_leaf: int = 4,
+    min_gain: float = 1e-7,
+    max_bins: int = MAX_BINS,
+    allowed_features: np.ndarray | None = None,
+) -> list[Tree]:
+    """Train one tree per ``(Xs[i], ys[i])`` subset in one vmapped dispatch.
+
+    Each subset is quantile-binned on its own rows (the shared contract
+    binning -- identical edges to what the numpy trainer would compute),
+    padded to a common row capacity and bin count, and grown by
+    ``hist.grow_forest_arenas``.  Structural parity with
+    ``core.tree.train_tree`` is node-for-node (see docs/PARITY.md).
+    """
+    S = len(Xs)
+    if S == 0:
+        return []
+    m = int(np.asarray(Xs[0]).shape[1])
+    C = int(n_classes)
+    allowed_mask = np.zeros(m, dtype=bool)
+    if allowed_features is None:
+        allowed_mask[:] = True
+    else:
+        allowed_mask[np.asarray(allowed_features, dtype=np.int64)] = True
+
+    if max_depth < 1:
+        return [hist.leaf_tree(y, C) for y in ys]
+
+    edges_list: list[list[np.ndarray]] = []
+    binned_list: list[np.ndarray] = []
+    for Xf in Xs:
+        e, b = hist.bin_for_growth(np.asarray(Xf), max_bins)
+        edges_list.append(e)
+        binned_list.append(b)
+
+    nbins = max(max((len(e) for e in edges), default=0)
+                for edges in edges_list) + 1
+    nbins = _round_up(nbins, 8)           # stabilise the jit cache
+    n_cap = _next_pow2(max(b.shape[0] for b in binned_list))
+
+    binned = np.zeros((S, n_cap, m), dtype=np.int32)
+    yb = np.zeros((S, n_cap), dtype=np.int32)
+    valid = np.zeros((S, n_cap), dtype=bool)
+    for i, (b, y) in enumerate(zip(binned_list, ys)):
+        ni = b.shape[0]
+        binned[i, :ni] = b
+        yb[i, :ni] = np.asarray(y, dtype=np.int32)
+        valid[i, :ni] = True
+
+    kk = int(k_features) if k_features is not None else m + 1
+    # chunk the fleet if one level's histogram would blow the memory
+    # budget (S * 2**(d-1) * m * nbins * C int32 live at once)
+    per_tree = (1 << (max_depth - 1)) * m * nbins * C
+    s_chunk = max(1, min(S, _HIST_BUDGET // max(per_tree, 1)))
+    s_chunk = _next_pow2(s_chunk + 1) // 2 if s_chunk > 1 else 1  # floor pow2
+
+    trees: list[Tree] = []
+    am = jnp.asarray(allowed_mask)
+    for lo in range(0, S, s_chunk):
+        hi = min(lo + s_chunk, S)
+        pad = s_chunk - (hi - lo)         # keep ONE compiled shape per fleet
+        sl = slice(lo, hi)
+        chunk = (np.concatenate([binned[sl], np.zeros_like(binned[:pad])])
+                 if pad else binned[sl])
+        ych = (np.concatenate([yb[sl], np.zeros_like(yb[:pad])])
+               if pad else yb[sl])
+        vch = (np.concatenate([valid[sl], np.zeros_like(valid[:pad])])
+               if pad else valid[sl])
+        feats, bins, counts, last_counts, _ = jax.device_get(
+            hist.grow_forest_arenas(
+                jnp.asarray(chunk), jnp.asarray(ych), jnp.asarray(vch), am,
+                depth=int(max_depth), n_classes=C, nbins=int(nbins),
+                k_features=kk, min_samples_leaf=int(min_samples_leaf),
+                min_gain=float(min_gain)))
+        for i in range(hi - lo):
+            trees.append(hist.arena_to_tree(
+                feats[i], bins[i], counts[i], last_counts[i],
+                edges_list[lo + i], C))
+    return trees
+
+
+def train_tree_jax(X, y, *, max_depth, k_features=None,
+                   allowed_features=None, n_classes=None,
+                   min_samples_leaf=4, min_gain=1e-7,
+                   max_bins=MAX_BINS) -> Tree:
+    """Single-tree convenience wrapper: ``core.tree.train_tree``'s jitted
+    twin (same signature, structurally identical output)."""
+    y = np.asarray(y, dtype=np.int64)
+    C = int(n_classes if n_classes is not None else y.max() + 1)
+    return train_forest([np.asarray(X)], [y], max_depth=max_depth,
+                        k_features=k_features, n_classes=C,
+                        min_samples_leaf=min_samples_leaf,
+                        min_gain=min_gain, max_bins=max_bins,
+                        allowed_features=allowed_features)[0]
+
+
+# ---------------------------------------------------------------------------
+# DSE candidate fleets
+# ---------------------------------------------------------------------------
+def pack_model_fleet(pdts: list) -> tuple:
+    """Pack a batch of models into ONE stacked ``DeviceTables``.
+
+    Pads every model to the batch's max subtree count ``S``, slot count
+    ``k``, threshold count ``T`` and leaf count ``L``, and re-encodes
+    exit actions (``action >= S_model`` means exit) for the shared
+    ``S``: labels survive as ``action - S`` regardless of which model
+    emitted them.  Returns ``(DeviceTables with leading model axis,
+    n_subtrees)``.
+    """
+    from repro.core.range_tables import pack_range_exec
+    from repro.core.tables import pack_tables
+    from repro.kernels import ops
+
+    packs = [(pack_tables(p), pack_range_exec(p)) for p in pdts]
+    S = max(t.n_subtrees for t, _ in packs)
+    k = max(t.k for t, _ in packs)
+    T = max(r.max_thresholds for _, r in packs)
+    L = max(r.max_leaves for _, r in packs)
+
+    def pad_model(t, r):
+        s0, k0 = t.slot_op.shape
+        l0, t0 = r.leaf_action.shape[1], r.thresholds.shape[2]
+        slot_op = np.zeros((S, k), np.int32)
+        slot_field = np.zeros((S, k), np.int32)
+        slot_pred = np.zeros((S, k), np.int32)
+        slot_init = np.zeros((S, k), np.float32)
+        thresholds = np.full((S, k, T), np.inf, np.float32)
+        leaf_lo = np.zeros((S, L, k), np.int32)
+        leaf_hi = np.full((S, L, k), T, np.int32)
+        leaf_action = np.full((S, L), -1, np.int32)
+        leaf_valid = np.zeros((S, L), np.int32)
+        slot_op[:s0, :k0] = t.slot_op
+        slot_field[:s0, :k0] = t.slot_field
+        slot_pred[:s0, :k0] = t.slot_pred
+        slot_init[:s0, :k0] = t.slot_init
+        thresholds[:s0, :k0, :t0] = r.thresholds
+        leaf_lo[:s0, :l0, :k0] = r.leaf_lo
+        leaf_hi[:s0, :l0, :k0] = r.leaf_hi
+        # exits were encoded against the model's own subtree count
+        act = r.leaf_action.astype(np.int64)
+        act = np.where((act >= r.n_subtrees) & (act >= 0),
+                       act - r.n_subtrees + S, act)
+        leaf_action[:s0, :l0] = act.astype(np.int32)
+        leaf_valid[:s0, :l0] = r.leaf_valid.astype(np.int32)
+        return (slot_op, slot_field, slot_pred, slot_init, thresholds,
+                leaf_lo, leaf_hi, leaf_action, leaf_valid)
+
+    stacked = [np.stack(arrs) for arrs in
+               zip(*(pad_model(t, r) for t, r in packs))]
+    dev = ops.DeviceTables(*(jnp.asarray(a) for a in stacked))
+    return dev, S
+
+
+@functools.partial(jax.jit, static_argnames=("n_subtrees",))
+def _fleet_walk(win_pkts, devs, *, n_subtrees):
+    from repro.core.inference import _partition_walk
+    from repro.kernels import ops
+
+    def one(dev):
+        labels, recircs, exit_p, _ = _partition_walk(
+            win_pkts, dev, n_subtrees=n_subtrees, with_trace=False,
+            step=ops.fused_step)
+        return labels, recircs, exit_p
+
+    return jax.vmap(one)(devs)
+
+
+def fleet_predict(pdts: list, win_pkts: np.ndarray):
+    """Score a batch of models against one flow batch in ONE dispatch.
+
+    ``win_pkts``: (B, P, W, F) from ``flows.windows.window_packets``
+    with ``P >= max(model.n_partitions)``.  Every model walks all P
+    hops -- flows have exited by the model's own last partition, so the
+    extra hops are no-ops and the verdicts are bit-identical to the
+    serial engine / ``PartitionedDT.predict``.  Returns
+    ``(labels (M, B), recircs (M, B), exit_partition (M, B))`` int32
+    numpy arrays.
+    """
+    dev, S = pack_model_fleet(pdts)
+    labels, recircs, exit_p = jax.device_get(
+        _fleet_walk(jnp.asarray(win_pkts), dev, n_subtrees=S))
+    return np.asarray(labels), np.asarray(recircs), np.asarray(exit_p)

@@ -1,0 +1,273 @@
+"""Jitted level-synchronous histogram tree induction.
+
+The XGBoost/LightGBM formulation of CART mapped onto JAX: features are
+quantile-binned on the host (``core.tree.quantile_bins`` -- the shared
+cross-trainer contract), then the whole tree grows inside one jitted
+program as a ``lax.scan`` over depth on a fixed ``2**(d+1)-1`` heap
+arena (node ``a``'s children are ``2a+1`` / ``2a+2``):
+
+* every sample carries its current arena position; one scatter-add
+  builds the level's ``(node, feature, bin, class)`` histogram;
+* per-(node, feature) best splits fall out of a cumulative-sum
+  reduction over bins -- the same f32 ``split_scores`` math as the
+  numpy oracle, class chain pinned left-to-right
+  (:func:`repro.core.tree.class_sq_chain`), so both trainers compare
+  identical bits;
+* the k-distinct-feature register budget is applied by a sequential
+  in-jit pass over the level's frontier (``repro.fit.kbudget``),
+  matching the numpy trainer's level-order greedy semantics;
+* samples descend (``bin <= split_bin`` == ``x <= edges[split_bin]``,
+  exactly) and the next level repeats.
+
+The result is **structurally identical** to
+:func:`repro.core.tree.train_tree` -- same feature/threshold/left/
+right/value arrays, node for node (tie-break: lowest bin, then lowest
+feature; see the contract in ``core/tree.py`` and docs/PARITY.md).
+``repro.fit.batched`` vmaps :func:`grow_arena` over whole subtree
+fleets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import MAX_BINS, Tree, bin_data, quantile_bins
+from repro.fit import kbudget
+
+
+def class_sq_chain(counts: jnp.ndarray) -> jnp.ndarray:
+    """``sum_c counts[...,c]^2`` as a left-to-right f32 chain.
+
+    The jnp twin of :func:`repro.core.tree.class_sq_chain`: the only
+    order-sensitive reduction in the split score, pinned so XLA cannot
+    re-associate it away from the numpy oracle's bits.
+    """
+    acc = jnp.zeros(counts.shape[:-1], jnp.float32)
+    for c in range(counts.shape[-1]):
+        x = counts[..., c].astype(jnp.float32)
+        acc = acc + x * x
+    return acc
+
+
+def _level_hist(binned, y, seg, *, frontier, nbins, n_classes):
+    """(node, feature, bin, class) counts for one level.
+
+    ``binned`` (n, m) int32, ``y`` (n,) int32, ``seg`` (n,) int32 --
+    frontier-local node index, or ``frontier`` for inactive samples
+    (their flattened index lands out of range and the scatter drops
+    it).  Returns (frontier, m, nbins, n_classes) int32.
+    """
+    n, m = binned.shape
+    j = jnp.arange(m, dtype=jnp.int32)[None, :]
+    idx = ((seg[:, None] * m + j) * nbins + binned) * n_classes + y[:, None]
+    flat = jnp.zeros(frontier * m * nbins * n_classes, jnp.int32)
+    flat = flat.at[idx.ravel()].add(1, mode="drop")
+    return flat.reshape(frontier, m, nbins, n_classes)
+
+
+def _level_scores(hist: jnp.ndarray):
+    """Best split per (node, feature) from the level histogram.
+
+    The jnp twin of :func:`repro.core.tree.split_scores` +
+    :func:`repro.core.tree.node_impurity`, vectorised over the frontier
+    and feature axes.  ``hist`` (F, m, nbins, C) int32.  Returns
+    ``(gain (F, m) f32, bin (F, m) i32, nl (F, m) i32,
+    total (F, C) i32)`` where ``bin`` is the first (lowest) argmin of
+    the child impurity and ``gain`` is ``-inf`` where no valid split
+    exists.
+    """
+    cum = jnp.cumsum(hist, axis=2)                       # (F, m, nbins, C)
+    total = cum[:, 0, -1, :]                             # (F, C)
+    nl = cum.sum(axis=3)                                 # (F, m, nbins)
+    n_node = total.sum(axis=1)                           # (F,)
+    nr = n_node[:, None, None] - nl
+    sl = class_sq_chain(cum)
+    sr = class_sq_chain(total[:, None, None, :] - cum)
+    one = jnp.float32(1.0)
+    nl_f = nl.astype(jnp.float32)
+    nr_f = nr.astype(jnp.float32)
+    child = ((nl_f - sl / jnp.maximum(nl_f, one))
+             + (nr_f - sr / jnp.maximum(nr_f, one)))
+    child = jnp.where((nl > 0) & (nr > 0), child, jnp.inf)
+    e = jnp.argmin(child, axis=2).astype(jnp.int32)      # first min
+    child_best = jnp.take_along_axis(child, e[..., None], axis=2)[..., 0]
+    n_f = n_node.astype(jnp.float32)
+    parent = n_f - class_sq_chain(total) / jnp.maximum(n_f, one)
+    gain = parent[:, None] - child_best                  # -inf when no split
+    nl_best = jnp.take_along_axis(nl, e[..., None], axis=2)[..., 0]
+    return gain, e, nl_best, total
+
+
+def grow_arena(
+    binned: jnp.ndarray,        # (n, m) int32 bin ids
+    y: jnp.ndarray,             # (n,) int32 class labels
+    valid: jnp.ndarray,         # (n,) bool  (False rows are padding)
+    allowed_mask: jnp.ndarray,  # (m,) bool  candidate features
+    *,
+    depth: int,
+    n_classes: int,
+    nbins: int,
+    k_features: int,
+    min_samples_leaf: int,
+    min_gain: float,
+):
+    """Grow one tree level-synchronously on the heap arena (jit-traceable).
+
+    Returns ``(feat (depth, F), bin (depth, F), counts (depth, F, C),
+    last_counts (2**depth, C), used_mask (m,))`` with
+    ``F = 2**(depth-1)`` -- level ``l``'s slot ``i`` is arena node
+    ``2**l - 1 + i`` (slots beyond ``2**l`` are inert padding).
+    ``feat == -1`` marks leaves; ``last_counts`` covers the bottom
+    (never-split) level.  Host code assembles a :class:`Tree` via
+    :func:`arena_to_tree`.
+    """
+    n, m = binned.shape
+    if depth < 1:
+        raise ValueError("grow_arena needs depth >= 1 (depth-0 trees are "
+                         "a single leaf; handle on the host)")
+    F = 1 << (depth - 1)
+    min_gain32 = jnp.float32(min_gain)
+    y = y.astype(jnp.int32)
+    binned = binned.astype(jnp.int32)
+
+    def level(carry, l):
+        pos, at_leaf, used = carry
+        base = jnp.left_shift(jnp.int32(1), l) - 1
+        local = pos - base
+        active = (~at_leaf) & valid
+        seg = jnp.where(active, local, F)
+        hist = _level_hist(binned, y, seg, frontier=F, nbins=nbins,
+                           n_classes=n_classes)
+        gain, bins, nl, total = _level_scores(hist)
+        used, feat, bin_out = kbudget.budget_level(
+            used, gain, bins, nl, total, allowed_mask=allowed_mask,
+            k_features=k_features, min_samples_leaf=min_samples_leaf,
+            min_gain32=min_gain32)
+        # descend: split samples move to a child, leaf samples freeze
+        slot = jnp.clip(local, 0, F - 1)
+        f = feat[slot]
+        is_split = active & (f >= 0)
+        bsel = jnp.take_along_axis(binned, jnp.maximum(f, 0)[:, None],
+                                   axis=1)[:, 0]
+        go_left = bsel <= bin_out[slot]              # == x <= edges[bin]
+        child = 2 * pos + 1 + jnp.where(go_left, 0, 1).astype(jnp.int32)
+        pos = jnp.where(is_split, child, pos)
+        at_leaf = at_leaf | (active & (f < 0))
+        return (pos, at_leaf, used), (feat, bin_out, total)
+
+    init = (jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.bool_),
+            jnp.zeros(m, jnp.bool_))
+    (pos, at_leaf, used), (feats, bins, counts) = jax.lax.scan(
+        level, init, jnp.arange(depth, dtype=jnp.int32))
+
+    # class counts of the bottom level (children of depth-1 splits)
+    lastbase = (1 << depth) - 1
+    seg = jnp.where((~at_leaf) & valid, pos - lastbase, 1 << depth)
+    idx = seg * n_classes + y
+    last = jnp.zeros((1 << depth) * n_classes, jnp.int32)
+    last = last.at[idx].add(jnp.where(seg < (1 << depth), 1, 0), mode="drop")
+    last_counts = last.reshape(1 << depth, n_classes)
+    return feats, bins, counts, last_counts, used
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "n_classes", "nbins", "k_features",
+                     "min_samples_leaf", "min_gain"))
+def grow_forest_arenas(binned, y, valid, allowed_mask, *, depth, n_classes,
+                       nbins, k_features, min_samples_leaf, min_gain):
+    """vmap of :func:`grow_arena` over a stacked subtree fleet.
+
+    ``binned`` (S, n, m), ``y`` (S, n), ``valid`` (S, n);
+    ``allowed_mask`` (m,) is shared.  One dispatch trains the whole
+    fleet -- this is what ``train_partitioned_dt(trainer="jax")`` calls
+    once per partition.
+    """
+    grow = functools.partial(
+        grow_arena, depth=depth, n_classes=n_classes, nbins=nbins,
+        k_features=k_features, min_samples_leaf=min_samples_leaf,
+        min_gain=min_gain)
+    return jax.vmap(grow, in_axes=(0, 0, 0, None))(
+        binned, y, valid, allowed_mask)
+
+
+def arena_to_tree(feats: np.ndarray, bins: np.ndarray, counts: np.ndarray,
+                  last_counts: np.ndarray, edges: list[np.ndarray],
+                  n_classes: int) -> Tree:
+    """Assemble the compact :class:`Tree` from arena outputs (host side).
+
+    Reachable arena nodes are renumbered in ascending heap order, which
+    is exactly the numpy trainer's BFS level-order numbering (left
+    child before right), so the resulting arrays are comparable
+    element-for-element.
+    """
+    D, F = feats.shape
+    A = (1 << (D + 1)) - 1
+    feat_h = np.full(A, -1, dtype=np.int64)
+    bin_h = np.zeros(A, dtype=np.int64)
+    val_h = np.zeros((A, n_classes), dtype=np.float32)
+    for lvl in range(D):
+        base = (1 << lvl) - 1
+        cnt = 1 << lvl
+        feat_h[base:base + cnt] = feats[lvl, :cnt]
+        bin_h[base:base + cnt] = bins[lvl, :cnt]
+        val_h[base:base + cnt] = counts[lvl, :cnt]
+    val_h[(1 << D) - 1:] = last_counts
+
+    exists = np.zeros(A, dtype=bool)
+    exists[0] = True
+    order: list[int] = []
+    for a in range(A):                      # ascending == level order
+        if not exists[a]:
+            continue
+        order.append(a)
+        if feat_h[a] >= 0:
+            exists[2 * a + 1] = True
+            exists[2 * a + 2] = True
+    new_id = {a: i for i, a in enumerate(order)}
+
+    n_nodes = len(order)
+    feature = np.full(n_nodes, -1, dtype=np.int32)
+    threshold = np.zeros(n_nodes, dtype=np.float32)
+    left = np.full(n_nodes, -1, dtype=np.int32)
+    right = np.full(n_nodes, -1, dtype=np.int32)
+    value = np.zeros((n_nodes, n_classes), dtype=np.float32)
+    for a in order:
+        i = new_id[a]
+        value[i] = val_h[a]
+        f = int(feat_h[a])
+        if f >= 0:
+            feature[i] = f
+            threshold[i] = np.float32(edges[f][int(bin_h[a])])
+            left[i] = new_id[2 * a + 1]
+            right[i] = new_id[2 * a + 2]
+    return Tree(feature=feature, threshold=threshold, left=left, right=right,
+                value=value, n_classes=n_classes)
+
+
+def leaf_tree(y: np.ndarray, n_classes: int) -> Tree:
+    """Depth-0 degenerate tree: a single leaf holding the class counts."""
+    counts = np.bincount(np.asarray(y, dtype=np.int64),
+                         minlength=n_classes).astype(np.float32)
+    return Tree(feature=np.asarray([-1], np.int32),
+                threshold=np.zeros(1, np.float32),
+                left=np.asarray([-1], np.int32),
+                right=np.asarray([-1], np.int32),
+                value=counts[None, :], n_classes=n_classes)
+
+
+def bin_for_growth(X: np.ndarray, max_bins: int = MAX_BINS):
+    """Host-side contract binning for one subtree's subset.
+
+    Returns ``(edges, binned int32)`` via the shared
+    :func:`repro.core.tree.quantile_bins` / :func:`bin_data` -- the
+    numpy trainer computes the identical edges from the identical
+    subset, which is what makes thresholds bit-equal across trainers.
+    """
+    X = np.asarray(X, dtype=np.float32)
+    edges = quantile_bins(X, max_bins)
+    binned = bin_data(X, edges).astype(np.int32)
+    return edges, binned

@@ -1,0 +1,87 @@
+"""SpliDT's k-distinct-feature register budget, enforced in-jit.
+
+Every SpliDT subtree must fit its features into the ``k`` register
+slots the data plane time-shares across partitions (paper §2.2), so the
+trainer caps the number of *distinct* features per tree.  The numpy
+oracle enforces this greedily in level order: each node sees the set of
+features used by every node decided before it (above it, or to its
+left on the same level); once that set reaches ``k``, only those
+features remain candidates.
+
+Greedy acquisition is inherently sequential -- node ``i``'s candidate
+mask depends on node ``i-1``'s choice -- so it cannot ride the
+vectorised split scoring in ``repro.fit.hist``.  Instead
+:func:`budget_level` replays it as a ``lax.scan`` over the level's
+frontier slots carrying a per-feature "used" mask: tiny (``F`` steps of
+O(m) work) next to the histogram reduction, and exactly the oracle's
+semantics because empty/padded slots decline to split and therefore
+never advance the mask.
+
+This is also where every other per-node split gate lives (purity,
+``min_samples_leaf``, ``min_gain``), so the scan's accept decision is
+the single point that must mirror ``core.tree.train_tree``'s leaf
+checks -- see the contract list in ``core/tree.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def budget_level(
+    used_mask: jnp.ndarray,     # (m,) bool  features used so far (tree-wide)
+    gain: jnp.ndarray,          # (F, m) f32 best gain per (node, feature)
+    bins: jnp.ndarray,          # (F, m) i32 best split bin per (node, feature)
+    nl: jnp.ndarray,            # (F, m) i32 left-child size at that bin
+    total: jnp.ndarray,         # (F, C) i32 per-node class counts
+    *,
+    allowed_mask: jnp.ndarray,  # (m,) bool
+    k_features: int,
+    min_samples_leaf: int,
+    min_gain32: jnp.ndarray,    # f32 scalar
+):
+    """Greedy per-node feature selection for one frontier level.
+
+    Scans the level's slots in heap order (== the numpy trainer's BFS
+    queue order).  For each node: restrict candidates to the budget
+    (``allowed`` while the distinct-feature count is below
+    ``k_features``, else ``allowed & used``), take the first-argmax
+    feature over masked gains (lowest feature index wins ties), then
+    apply the oracle's leaf gates -- purity, ``2*min_samples_leaf``
+    node size, strict ``min_gain`` improvement, per-child
+    ``min_samples_leaf``.  Accepted splits update the used mask that
+    the NEXT slot sees.
+
+    Returns ``(used_mask, feat (F,) i32 [-1 = leaf], bin (F,) i32)``.
+    """
+    m = used_mask.shape[0]
+    msl = jnp.int32(min_samples_leaf)
+
+    def one(used, xs):
+        g_row, b_row, nl_row, tot = xs
+        n_node = tot.sum()
+        pure = (tot > 0).sum() <= 1
+        budget_open = used.sum() < k_features
+        cand = jnp.where(budget_open, allowed_mask, allowed_mask & used)
+        g = jnp.where(cand, g_row, -jnp.inf)
+        j = jnp.argmax(g).astype(jnp.int32)          # first max: lowest fid
+        gj = g[j]
+        nlj = nl_row[j]
+        nrj = n_node - nlj
+        ok = ((~pure) & (n_node >= 2 * msl) & (gj > min_gain32)
+              & (nlj >= msl) & (nrj >= msl))
+        feat = jnp.where(ok, j, jnp.int32(-1))
+        used = used | (ok & (jnp.arange(m, dtype=jnp.int32) == j))
+        return used, (feat, jnp.where(ok, b_row[j], jnp.int32(0)))
+
+    used_mask, (feat, bin_out) = jax.lax.scan(
+        one, used_mask, (gain, bins, nl, total))
+    return used_mask, feat, bin_out
+
+
+def distinct_feature_count(feature: jnp.ndarray, n_features: int) -> jnp.ndarray:
+    """Number of distinct features a flat ``feature`` array uses (>= 0
+    entries) -- the quantity the budget caps; handy for property tests."""
+    f = jnp.asarray(feature)
+    onehot = (f[:, None] == jnp.arange(n_features)[None, :]) & (f[:, None] >= 0)
+    return onehot.any(axis=0).sum()

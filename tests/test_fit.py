@@ -1,0 +1,233 @@
+"""repro.fit: jitted trainer parity, budget enforcement, batched DSE.
+
+The zero-tolerance half of the cross-trainer contract stated in
+``core/tree.py`` and docs/PARITY.md: the jitted level-synchronous
+grower must reproduce the numpy oracle *structurally* -- identical
+feature/threshold/left/right/value arrays, node for node -- so
+``trainer="jax"`` DSE runs are interchangeable with ``trainer="numpy"``
+ones.
+"""
+import numpy as np
+import pytest
+
+from repro.testing.hypothesis_compat import given, settings, strategies as st
+
+from repro.core.dse import (
+    Config, SearchSpace, bayes_search, make_splidt_evaluator,
+)
+from repro.core.partition import train_partitioned_dt
+from repro.core.tree import macro_f1, train_tree
+from repro.fit import fleet_predict, train_forest, train_tree_jax
+from repro.flows.windows import window_features, window_packets
+
+
+def _assert_trees_equal(a, b, ctx=""):
+    for name in ("feature", "threshold", "left", "right", "value"):
+        np.testing.assert_array_equal(
+            getattr(a, name), getattr(b, name),
+            err_msg=f"{ctx}: Tree.{name} diverged")
+
+
+# ---------------------------------------------------------------------------
+# (a) the k budget holds for jitted trees
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 6))
+def test_jax_trees_respect_k_budget(seed, k, depth):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 300))
+    m = int(rng.integers(max(k, 2), 14))
+    C = int(rng.integers(2, 5))
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    y = rng.integers(0, C, n)
+    t = train_tree_jax(X, y, max_depth=depth, k_features=k, n_classes=C)
+    assert len(t.used_features()) <= k
+    assert t.max_depth <= depth
+
+
+# ---------------------------------------------------------------------------
+# (b) structural parity with the numpy oracle across random shapes
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grower_structural_parity(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(30, 400))
+    m = int(rng.integers(2, 14))
+    C = int(rng.integers(2, 6))
+    depth = int(rng.integers(1, 7))
+    k = int(rng.integers(1, m + 1)) if rng.random() < 0.7 else None
+    msl = int(rng.integers(1, 6))
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    if rng.random() < 0.3:      # duplicate-heavy columns stress tie-breaks
+        X = np.round(X * 2) / 2
+    y = rng.integers(0, C, n)
+    kw = dict(max_depth=depth, k_features=k, n_classes=C,
+              min_samples_leaf=msl)
+    _assert_trees_equal(train_tree(X, y, **kw), train_tree_jax(X, y, **kw),
+                        ctx=f"seed={seed}")
+
+
+def test_grower_parity_with_allowed_features():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(250, 10)).astype(np.float32)
+    y = rng.integers(0, 3, 250)
+    allowed = np.array([1, 4, 7])
+    kw = dict(max_depth=5, k_features=2, n_classes=3,
+              allowed_features=allowed)
+    t1, t2 = train_tree(X, y, **kw), train_tree_jax(X, y, **kw)
+    _assert_trees_equal(t1, t2)
+    assert set(t2.used_features()) <= set(allowed.tolist())
+
+
+def test_forest_matches_per_tree_training():
+    """One vmapped fleet dispatch == training each subset separately."""
+    rng = np.random.default_rng(3)
+    Xs, ys = [], []
+    for _ in range(5):
+        n = int(rng.integers(40, 200))
+        Xs.append(rng.normal(size=(n, 8)).astype(np.float32))
+        ys.append(rng.integers(0, 3, n))
+    fleet = train_forest(Xs, ys, max_depth=4, k_features=3, n_classes=3)
+    for i, (X, y) in enumerate(zip(Xs, ys)):
+        solo = train_tree(X, y, max_depth=4, k_features=3, n_classes=3)
+        _assert_trees_equal(solo, fleet[i], ctx=f"fleet[{i}]")
+
+
+def test_partitioned_trainer_parity(small_flow_ds):
+    """trainer="jax" trains the full PartitionedDT under jit, identical
+    to the numpy trainer subtree-for-subtree (acceptance criterion)."""
+    tr, _ = small_flow_ds.split()
+    Xw = window_features(tr, 3)
+    kw = dict(partition_sizes=[2, 3, 2], k=4,
+              n_classes=small_flow_ds.n_classes)
+    p1 = train_partitioned_dt(Xw, tr.labels, **kw)
+    p2 = train_partitioned_dt(Xw, tr.labels, trainer="jax", **kw)
+    assert len(p1.subtrees) == len(p2.subtrees)
+    for a, b in zip(p1.subtrees, p2.subtrees):
+        assert (a.sid, a.partition) == (b.sid, b.partition)
+        assert a.leaf_next_sid == b.leaf_next_sid
+        assert a.leaf_label == b.leaf_label
+        _assert_trees_equal(a.tree, b.tree, ctx=f"sid={a.sid}")
+
+
+def test_partitioned_trainer_rejects_unknown():
+    with pytest.raises(ValueError, match="trainer"):
+        train_partitioned_dt(np.zeros((8, 1, 3)), np.zeros(8, np.int64),
+                             partition_sizes=[1], k=1, trainer="torch")
+
+
+# ---------------------------------------------------------------------------
+# batched DSE evaluation
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dse_setup(small_flow_ds):
+    tr, te = small_flow_ds.split()
+    P = 3
+    return dict(
+        Xw_tr=window_features(tr, P), y_tr=tr.labels,
+        Xw_te=window_features(te, P), y_te=te.labels,
+        wp_te=window_packets(te, P), n_classes=small_flow_ds.n_classes)
+
+
+def test_fleet_predict_matches_oracle(dse_setup):
+    s = dse_setup
+    pdts = [train_partitioned_dt(s["Xw_tr"][:, :p], s["y_tr"],
+                                 partition_sizes=sizes, k=k,
+                                 n_classes=s["n_classes"])
+            for p, sizes, k in [(3, [2, 2, 2], 3), (2, [3, 2], 4),
+                                (1, [4], 2)]]
+    labels, recircs, exit_p = fleet_predict(pdts, s["wp_te"])
+    for i, pdt in enumerate(pdts):
+        ref, rr, ee = pdt.predict(s["Xw_te"][:, :pdt.n_partitions],
+                                  return_trace=True)
+        np.testing.assert_array_equal(labels[i], ref)
+        np.testing.assert_array_equal(recircs[i], rr)
+        np.testing.assert_array_equal(exit_p[i], ee)
+
+
+def test_evaluate_batch_matches_serial(dse_setup):
+    s = dse_setup
+    ev = make_splidt_evaluator(
+        s["Xw_tr"], s["y_tr"], s["Xw_te"], s["y_te"],
+        n_classes=s["n_classes"], flows=100_000, win_pkts_te=s["wp_te"])
+    cfgs = [Config(3, (2, 2)), Config(2, (3,)), Config(4, (2, 2, 2))]
+    batched = ev.evaluate_batch(cfgs)
+    for cfg, b in zip(cfgs, batched):
+        a = ev(cfg)
+        assert a == b, cfg
+
+
+# (c) jax-trainer DSE reproduces the numpy-trainer history exactly
+def test_dse_trainer_parity(dse_setup):
+    s = dse_setup
+    space = SearchSpace(max_partitions=3, k_max=4, depth_max=4)
+    kw = dict(n_classes=s["n_classes"], flows=100_000)
+    common = (s["Xw_tr"], s["y_tr"], s["Xw_te"], s["y_te"])
+    r_np = bayes_search(make_splidt_evaluator(*common, **kw), space,
+                        n_iterations=2, batch=3, n_init=4, seed=0)
+    r_jax = bayes_search(
+        make_splidt_evaluator(*common, trainer="jax",
+                              win_pkts_te=s["wp_te"], **kw),
+        space, n_iterations=2, batch=3, n_init=4, seed=0)
+    assert [e.config for e in r_np.history] == [e.config for e in r_jax.history]
+    assert [e.f1 for e in r_np.history] == [e.f1 for e in r_jax.history]
+    assert [e.feasible for e in r_np.history] == [
+        e.feasible for e in r_jax.history]
+    assert r_np.best.config == r_jax.best.config
+    assert r_np.iterations_to_best == r_jax.iterations_to_best
+
+
+# ---------------------------------------------------------------------------
+# bayes_search batch fill (satellite: no silent underfill)
+# ---------------------------------------------------------------------------
+def test_bayes_search_full_batches():
+    """Every iteration evaluates exactly ``batch`` distinct configs even
+    when the sampler keeps colliding with ``seen`` (tiny space)."""
+    space = SearchSpace(max_partitions=1, k_max=2, depth_max=3)  # 6 configs
+    calls: list[Config] = []
+
+    def fake_eval(cfg: Config):
+        calls.append(cfg)
+        from repro.core.dse import Evaluation
+        return Evaluation(config=cfg, f1=0.5, feasible=True,
+                          flow_capacity=1, tcam_entries=1, register_bits=1,
+                          recirc_mbps=0.0, n_subtrees=1, unique_features=1)
+
+    res = bayes_search(fake_eval, space, n_iterations=2, batch=2, n_init=2,
+                       n_candidates=8, seed=0)
+    assert len(res.history) == 2 + 2 * 2      # n_init + iterations x batch
+    assert len(set(calls)) == len(calls)      # never re-evaluates a config
+
+
+# ---------------------------------------------------------------------------
+# vectorised macro_f1 (satellite)
+# ---------------------------------------------------------------------------
+def _macro_f1_loop(y_true, y_pred, n_classes):
+    f1s = []
+    for c in range(n_classes):
+        tp = int(((y_pred == c) & (y_true == c)).sum())
+        fp = int(((y_pred == c) & (y_true != c)).sum())
+        fn = int(((y_pred != c) & (y_true == c)).sum())
+        if tp + fp + fn == 0:
+            continue
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(0.0 if prec + rec == 0 else 2 * prec * rec / (prec + rec))
+    return float(np.mean(f1s)) if f1s else 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+def test_macro_f1_matches_per_class_loop(seed, C):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    y_true = rng.integers(0, C, n)
+    y_pred = rng.integers(-1, C, n)     # includes the -1 sentinel
+    assert macro_f1(y_true, y_pred, C) == _macro_f1_loop(y_true, y_pred, C)
+
+
+def test_macro_f1_empty_and_perfect():
+    y = np.array([0, 1, 2, 2])
+    assert macro_f1(y, y, 3) == 1.0
+    assert macro_f1(np.zeros(0, np.int64), np.zeros(0, np.int64), 3) == 0.0
