@@ -66,7 +66,7 @@ from benchmarks.common import (
     Row, dataset, profile_dataset, profile_model, splidt_model, timed,
     timed_min,
 )
-from repro.core.inference import Engine
+from repro.core.inference import Engine, EngineOptions
 from repro.flows.synthetic import EXIT_PROFILES
 from repro.flows.windows import window_packets
 from repro.serve.streaming import run_streaming
@@ -141,14 +141,15 @@ def run(quick: bool = True, smoke: bool = False):
     # so cap the batch to keep compile time sane on CPU
     Bp = min(B, 256 if smoke else 2048)
     wpp = wp[:Bp]
-    _, us_pal = timed(lambda: eng.run(wpp, with_trace=False, impl="pallas"),
+    _, us_pal = timed(lambda: eng.run(wpp, with_trace=False,
+                            options=EngineOptions(impl="pallas")),
                       repeat=repeat)
     add("engine/pallas", us_pal, Bp, interpret=int(
         jax.default_backend() != "tpu"))
 
     mb = 128 if smoke else 4096
     _, us_stream = timed(
-        lambda: run_streaming(eng, wp, micro_batch=mb), repeat=repeat)
+        lambda: run_streaming(eng, wp, options=EngineOptions(micro_batch=mb)), repeat=repeat)
     add("engine/streaming", us_stream, B, micro_batch=mb)
 
     from repro.distributed.sharding import flow_batch_devices
@@ -165,11 +166,13 @@ def run(quick: bool = True, smoke: bool = False):
     us_base = us_stream
     if mb_s != mb:
         _, us_base = timed(
-            lambda: run_streaming(eng, wp, micro_batch=mb_s),
+            lambda: run_streaming(eng, wp,
+                                  options=EngineOptions(micro_batch=mb_s)),
             repeat=repeat)
         add(f"engine/streaming@mb={mb_s}", us_base, B, micro_batch=mb_s)
     _, us_shard = timed(
-        lambda: run_streaming(eng, wp, micro_batch=mb_s, mesh=mesh),
+        lambda: run_streaming(eng, wp, options=EngineOptions(
+            micro_batch=mb_s, mesh=mesh)),
         repeat=repeat)
     # a 1-device mesh shards against itself: the "speedup" would be pure
     # timer noise around 1.0, so record null rather than a number
@@ -216,7 +219,8 @@ def run(quick: bool = True, smoke: bool = False):
         add(f"engine/compact/{profile}/dense", us_dense, Bc,
             exit_frac=exit_frac)
         _, us_comp = timed(
-            lambda: eng_c.run(wp_c, with_trace=False, compact=True),
+            lambda: eng_c.run(wp_c, with_trace=False,
+                              options=EngineOptions(compact=True)),
             repeat=repeat)
         add(f"engine/compact/{profile}/fused", us_comp, Bc,
             exit_frac=exit_frac,
@@ -228,15 +232,17 @@ def run(quick: bool = True, smoke: bool = False):
         wp_cp = wp_c[:Bcp]
         interp = int(jax.default_backend() != "tpu")
         pd_res, us_pd = timed(
-            lambda: eng_c.run(wp_cp, with_trace=False, impl="pallas"),
+            lambda: eng_c.run(wp_cp, with_trace=False,
+                              options=EngineOptions(impl="pallas")),
             repeat=repeat)
         exit_frac_p = [round(float(np.mean(pd_res.exit_partition == q)), 3)
                        for q in range(pdt_c.n_partitions)]
         add(f"engine/compact/{profile}/pallas_dense", us_pd, Bcp,
             exit_frac=exit_frac_p, interpret=interp)
         _, us_pc = timed(
-            lambda: eng_c.run(wp_cp, with_trace=False, impl="pallas",
-                              compact=True),
+            lambda: eng_c.run(wp_cp, with_trace=False,
+                              options=EngineOptions(impl="pallas",
+                                                    compact=True)),
             repeat=repeat)
         add(f"engine/compact/{profile}/pallas", us_pc, Bcp,
             exit_frac=exit_frac_p, interpret=interp,
@@ -270,10 +276,12 @@ def run(quick: bool = True, smoke: bool = False):
                 # between their timing windows cancels
                 rounds = max(repeat, 2)
                 fixed: dict[str, float] = {}
-                run_fused = lambda: eng_a.run(wp_a, with_trace=False,
-                                              impl="fused")
-                run_auto = lambda: eng_a.run(wp_a, with_trace=False,
-                                             impl="auto")
+                run_fused = lambda: eng_a.run(
+                    wp_a, with_trace=False,
+                    options=EngineOptions(impl="fused"))
+                run_auto = lambda: eng_a.run(
+                    wp_a, with_trace=False,
+                    options=EngineOptions(impl="auto"))
                 res_a = run_auto()                       # warm both paths
                 run_fused()
                 t_f, t_a = [], []
@@ -285,8 +293,10 @@ def run(quick: bool = True, smoke: bool = False):
                 fixed["fused"], us_auto = min(t_f), min(t_a)
                 if Bv <= pallas_cap:
                     fixed["pallas"] = timed_min(
-                        lambda: eng_a.run(wp_a, with_trace=False,
-                                          impl="pallas"), rounds=rounds)
+                        lambda: eng_a.run(
+                            wp_a, with_trace=False,
+                            options=EngineOptions(impl="pallas")),
+                        rounds=rounds)
                 if B_name == "smallB":      # host-sync path: too slow to
                     fixed["looped"] = timed_min(   # time at large B
                         lambda: eng_a.run_looped(wp_a, with_trace=False),
@@ -318,15 +328,18 @@ def run(quick: bool = True, smoke: bool = False):
             Bt = 256 if smoke else 4096
             wpt = wp[:Bt]
             t0 = time.perf_counter()
-            cold = eng.run(wpt, with_trace=False, impl="tuned")
+            cold = eng.run(wpt, with_trace=False,
+                           options=EngineOptions(impl="tuned"))
             cold_us = (time.perf_counter() - t0) * 1e6
             _, us_tuned = timed(
-                lambda: eng.run(wpt, with_trace=False, impl="tuned"),
+                lambda: eng.run(wpt, with_trace=False,
+                                options=EngineOptions(impl="tuned")),
                 repeat=repeat)
-            warm = eng.run(wpt, with_trace=False, impl="tuned")
+            warm = eng.run(wpt, with_trace=False,
+                           options=EngineOptions(impl="tuned"))
             # tuned must be bit-identical to the backend it routed to
             forced = eng.run(wpt, with_trace=False,
-                             impl=warm.plan.backend)
+                             options=EngineOptions(impl=warm.plan.backend))
             exact = bool(
                 np.array_equal(warm.labels, forced.labels)
                 and np.array_equal(warm.recircs, forced.recircs)

@@ -1,0 +1,146 @@
+"""Live serving throughput: the flow-table server on replayed streams.
+
+The batch engine answers "how fast can we score windows we already
+have"; this answers the deployment question — sustained packets/sec
+through :class:`repro.serve.FlowTableServer` with verdicts emitted
+in-stream.  Rows are written to ``BENCH_serve.json`` (override with the
+BENCH_SERVE_JSON env var) alongside the CSV, one per
+``<profile>/<impl>`` cell:
+
+* ``pkts_per_s`` — sustained ingest throughput over the whole replay
+  (all ticks + flush, steady-state: jit warm-up excluded by a priming
+  replay on a stream prefix);
+* ``verdict_p50_ms`` / ``verdict_p99_ms`` — per-verdict serving
+  latency.  A verdict's latency is the wall time of the ingest call
+  that emitted it: the time the caller waited on the serving step for
+  that answer (arrival-queueing time is a property of the replayed
+  trace, not of the server, so it is excluded on purpose);
+* ``max_resident_flows`` — peak concurrent flows held (table slots +
+  host spill), the memory high-water mark;
+* ``spilled`` / ``evicted`` — how often the hash table overflowed to
+  the host and how many flows timed out mid-stream.
+
+Both arrival profiles (``steady``, ``bursty``) run so the tail latency
+row captures burst behaviour, not just the uniform-arrival best case.
+Verdict parity is not re-checked here — ``tests/test_flowtable.py``
+holds the server bit-identical to the batch walk."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, dataset, splidt_model
+
+JSON_PATH_ENV = "BENCH_SERVE_JSON"
+DEFAULT_JSON_PATH = "BENCH_serve.json"
+
+P = 3
+
+
+def _write_json(results: list[dict], mode: str) -> str:
+    import jax
+    path = os.environ.get(JSON_PATH_ENV, DEFAULT_JSON_PATH)
+    payload = {
+        "bench": "serve",
+        "mode": mode,
+        "jax_backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "cpu_count": os.cpu_count(),
+        "results": results,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def _replay(make_server, stream, tick: int):
+    """Replay the stream; return (seconds, verdict latencies, stats)."""
+    srv = make_server()
+    lat: list[float] = []
+    t_total = 0.0
+    for batch in stream.ticks(tick):
+        t0 = time.perf_counter()
+        v = srv.ingest(batch)
+        dt = time.perf_counter() - t0
+        t_total += dt
+        lat.extend([dt] * v.n_flows)
+    t0 = time.perf_counter()
+    v = srv.flush()
+    dt = time.perf_counter() - t0
+    t_total += dt
+    lat.extend([dt] * v.n_flows)
+    return t_total, np.asarray(lat), srv.stats
+
+
+def run(quick: bool = True, smoke: bool = False):
+    from repro.core.inference import Engine, EngineOptions
+    from repro.flows.synthetic import ARRIVAL_PROFILES, make_packet_stream
+    from repro.serve import FlowTableServer
+
+    if smoke:
+        n_flows, tick, buckets = 96, 64, 8
+    elif quick:
+        n_flows, tick, buckets = 1200, 256, 32
+    else:
+        n_flows, tick, buckets = 4000, 512, 64
+
+    pdt = splidt_model("d2", (2, 3, 2), 4, n_flows=n_flows)
+    eng = Engine.from_model(pdt)
+    _, tr, _ = dataset("d2", n_flows)
+
+    rows: list[Row] = []
+    results: list[dict] = []
+    impls = ("fused",) if smoke else ("fused", "pallas")
+    for profile in ARRIVAL_PROFILES:
+        stream = make_packet_stream(tr, seed=7, profile=profile)
+        warm = stream.slice(0, min(stream.n_packets, 4 * tick))
+        for impl in impls:
+            def make_server(impl=impl):
+                return FlowTableServer(
+                    eng, n_buckets=buckets, bucket_size=8,
+                    options=EngineOptions(impl=impl))
+            # prime jit caches on a prefix so the timed replay is
+            # steady-state (the capacity ladder keeps shapes shared)
+            srv = make_server()
+            srv.ingest(warm)
+            srv.flush()
+
+            secs, lat, stats = _replay(make_server, stream, tick)
+            pkts_s = stats.packets / secs if secs > 0 else float("inf")
+            p50 = float(np.percentile(lat, 50) * 1e3)
+            p99 = float(np.percentile(lat, 99) * 1e3)
+            name = f"serve/{profile}/{impl}"
+            rows.append(Row(name, secs / max(stats.verdicts, 1) * 1e6,
+                            f"pkts_per_s={pkts_s:.0f};p50_ms={p50:.2f};"
+                            f"p99_ms={p99:.2f};"
+                            f"peak_resident={stats.peak_resident}"))
+            results.append({
+                "name": name,
+                "profile": profile,
+                "impl": impl,
+                "n_flows": stats.flows_seen,
+                "n_packets": stats.packets,
+                "tick": tick,
+                "pkts_per_s": round(pkts_s, 1),
+                "verdict_p50_ms": round(p50, 3),
+                "verdict_p99_ms": round(p99, 3),
+                "max_resident_flows": stats.peak_resident,
+                "spilled": stats.spilled,
+                "evicted": stats.evicted,
+            })
+
+    path = _write_json(results, "smoke" if smoke else
+                       ("quick" if quick else "full"))
+    rows.append(Row("serve/json", 0.0, f"path={path};rows={len(results)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run(quick="--full" not in sys.argv,
+                   smoke="--smoke" in sys.argv):
+        print(row.csv())

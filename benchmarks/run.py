@@ -26,7 +26,7 @@ import time
 import traceback
 
 MODULES = ["pareto", "resources", "recirc_ttd", "dse", "kernels", "engine",
-           "fit", "roofline"]
+           "fit", "serve", "roofline"]
 
 
 def main() -> None:

@@ -4,7 +4,8 @@
 
 Builds a synthetic SpliDT model, asks the router for its analytical
 pick (``impl="auto"``, cost model — no timing), then runs the real
-tuner (``impl="tuned"``): candidate plans are shortlisted by the cost
+tuner (``EngineOptions(impl="tuned")``): candidate plans are
+shortlisted by the cost
 model, timed on the actual windows, and the winner is cached per
 (shape, device fingerprint), so re-running this script resolves the
 plan with a dict lookup.  Finally the tuned route is cross-checked
@@ -35,7 +36,7 @@ def main() -> int:
         os.environ["SPLIDT_AUTOTUNE_CACHE"] = os.path.join(
             tempfile.mkdtemp(prefix="splidt-tune-"), "autotune.json")
 
-    from repro.core.inference import Engine
+    from repro.core.inference import Engine, EngineOptions
     from repro.core.partition import train_partitioned_dt
     from repro.flows.synthetic import make_dataset
     from repro.flows.windows import window_features, window_packets
@@ -57,26 +58,29 @@ def main() -> int:
     print(f"model: S={shape.S} subtrees over P={shape.P} partitions, "
           f"k={shape.k} registers; batch B={shape.B}, W={shape.W}")
 
-    # 1. the analytical router (what impl="auto" does on every call)
+    # 1. the analytical router (what EngineOptions(impl="auto") does
+    # on every call)
     print("\ncost-model estimates (us/batch):")
     for b in ("looped", "fused", "pallas"):
         print(f"  {b:>7}: {estimate_us(shape, Plan(backend=b)):>12.0f}")
     print(f"impl='auto' would pick: {choose_plan(shape).describe()}")
 
     # 2. the empirical tuner (impl="tuned"): cold call probes + caches
+    tuned = EngineOptions(impl="tuned")
     t0 = time.perf_counter()
-    res = eng.run(wp, with_trace=False, impl="tuned")
+    res = eng.run(wp, with_trace=False, options=tuned)
     cold_s = time.perf_counter() - t0
     print(f"\nimpl='tuned' cold call: {cold_s:.2f}s "
           f"-> plan: {res.plan.describe()}")
     t0 = time.perf_counter()
-    res2 = eng.run(wp, with_trace=False, impl="tuned")
+    res2 = eng.run(wp, with_trace=False, options=tuned)
     print(f"impl='tuned' warm call: {time.perf_counter() - t0:.3f}s "
           f"(plan source: {res2.plan.source})")
     print(f"cache: {cache_path()}")
 
     # 3. parity: the tuned route must be bit-identical to the reference
-    ref = eng.run(wp, with_trace=False, impl="fused")
+    ref = eng.run(wp, with_trace=False,
+                  options=EngineOptions(impl="fused"))
     for field in ("labels", "recircs", "exit_partition"):
         np.testing.assert_array_equal(getattr(res2, field),
                                       getattr(ref, field))

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -91,6 +92,106 @@ class EngineResult:
 # one partition stage (defined next to DeviceTables; re-exported here
 # because backends and the streaming scheduler type against it)
 StepFn = ops.StepFn
+
+
+# ---------------------------------------------------------------------------
+# engine options — every execution knob in one frozen bag
+# ---------------------------------------------------------------------------
+
+_IMPLS = (None, "auto", "tuned", "ref", "fused", "pallas", "looped")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """All engine execution knobs, in one frozen value.
+
+    ``Engine.run`` / ``run_looped`` / ``run_streaming`` and the serving
+    layer (``repro.serve``) all accept ``options=EngineOptions(...)``;
+    each entry point reads the knobs that apply to it and ignores the
+    rest (e.g. ``Engine.run`` never micro-batches, so ``micro_batch``
+    is inert there).  The legacy per-call keywords (``impl=``,
+    ``compact=``, ``mesh=``, ...) still work but emit a
+    ``DeprecationWarning`` and cannot be mixed with ``options=``.
+
+    ===============  =====================================================
+    knob             meaning
+    ===============  =====================================================
+    impl             backend request: ``None`` (engine default), a fixed
+                     backend (``fused``/``ref``/``pallas``/``looped``),
+                     ``"auto"`` (cost model) or ``"tuned"`` (autotune
+                     cache) — see ``repro.tuning``
+    plan             a pre-resolved ``repro.tuning.Plan``; wins over
+                     ``impl``/``compact``/``block_b`` (the plan already
+                     carries all three)
+    compact          early-exit compaction: True/False pinned, or
+                     ``"auto"`` (the routing plan decides)
+    compact_floor    smallest capacity bucket of the compaction ladder
+    block_b          Pallas flow-block rows (None = kernel default;
+                     only read when the resolved backend is pallas)
+    micro_batch      streaming/serving chunk size (flows per dispatch)
+    inflight         streaming pipeline depth (chunks in flight)
+    donate           donate packet buffers to the walk (None = off-CPU)
+    mesh             ``jax.sharding.Mesh`` to shard the flow axis over
+    ===============  =====================================================
+    """
+    impl: str | None = None
+    plan: "object | None" = None
+    compact: bool | str = False
+    compact_floor: int = compaction.COMPACT_FLOOR
+    block_b: int | None = None
+    micro_batch: int = 4096
+    inflight: int = 2
+    donate: bool | None = None
+    mesh: "object | None" = None
+
+    def __post_init__(self):
+        if self.impl not in _IMPLS:
+            raise ValueError(f"unknown impl {self.impl!r}; options: "
+                             + ", ".join(str(i) for i in _IMPLS))
+        if self.compact not in (True, False, "auto"):
+            raise ValueError(
+                f"compact must be True, False or 'auto', got {self.compact!r}")
+        if self.compact_floor <= 0:
+            raise ValueError("compact_floor must be positive")
+        if self.block_b is not None and self.block_b <= 0:
+            raise ValueError("block_b must be positive")
+        if self.micro_batch <= 0:
+            raise ValueError("micro_batch must be positive")
+        if self.inflight <= 0:
+            raise ValueError("inflight must be positive")
+
+    def replace(self, **changes) -> "EngineOptions":
+        """``dataclasses.replace`` as a method (frozen-friendly)."""
+        return dataclasses.replace(self, **changes)
+
+
+#: Sentinel distinguishing "legacy keyword not passed" from any real
+#: value (None is meaningful for several knobs).
+_UNSET = object()
+
+
+def _legacy_options(options: EngineOptions | None, legacy: dict,
+                    *, stacklevel: int = 3) -> EngineOptions:
+    """Fold explicitly-passed legacy keywords into an EngineOptions.
+
+    The deprecation shim shared by ``Engine.run``/``run_looped``/
+    ``run_streaming`` and ``repro.serve.streaming``: legacy keywords
+    still work (every pre-EngineOptions call site keeps its behaviour)
+    but warn once per call site, and mixing them with ``options=`` is
+    an error rather than a silent precedence rule.
+    """
+    passed = {key: v for key, v in legacy.items() if v is not _UNSET}
+    if not passed:
+        return options if options is not None else EngineOptions()
+    if options is not None:
+        raise ValueError(
+            "pass options=EngineOptions(...) OR legacy keyword(s) "
+            f"({', '.join(sorted(passed))}), not both")
+    warnings.warn(
+        "keyword(s) " + ", ".join(sorted(passed)) + " are deprecated; "
+        "use options=EngineOptions(...) instead",
+        DeprecationWarning, stacklevel=stacklevel)
+    return EngineOptions(**passed)
 
 
 def _walk_init(B: int) -> tuple[jnp.ndarray, ...]:
@@ -464,66 +565,87 @@ class Engine:
     # unified entry point
     # ------------------------------------------------------------------
     def run(self, win_pkts: np.ndarray, *, with_trace: bool = True,
-            impl: str | None = None,
-            compact: bool | str = False) -> EngineResult:
+            options: EngineOptions | None = None,
+            impl: "str | None | object" = _UNSET,
+            compact: "bool | str | object" = _UNSET) -> EngineResult:
         """``win_pkts``: (B, p, W, PKT_NFIELDS) from ``window_packets``.
 
-        ``impl`` overrides the engine's default:
+        Execution knobs arrive as ``options=EngineOptions(...)``
+        (``impl=``/``compact=`` remain as deprecated shims):
 
-        * a fixed backend name (``fused``/``ref``/``pallas``/``looped``)
-          dispatches straight to :func:`get_backend`;
-        * ``"auto"`` routes through the cost model
-          (``repro.tuning.costmodel``) using this batch's shape —
-          backend AND ``block_b`` are chosen analytically, no timing;
-        * ``"tuned"`` routes through the autotune cache
-          (``repro.tuning.autotune``): first call on a new (shape,
+        * ``options.plan`` (a pre-resolved ``repro.tuning.Plan``) wins
+          outright — backend, ``block_b`` and compaction come from it;
+        * otherwise ``options.impl`` (falling back to the engine's
+          default): a fixed backend name dispatches straight to
+          :func:`get_backend`; ``"auto"`` routes through the cost model
+          (``repro.tuning.costmodel``) using this batch's shape;
+          ``"tuned"`` routes through the autotune cache
+          (``repro.tuning.autotune``) — first call on a new (shape,
           host) times a cost-model shortlist, later calls are a lookup.
 
-        For ``auto``/``tuned`` (and for ``compact="auto"``) the chosen
-        :class:`repro.tuning.Plan` is attached to the result as
-        ``EngineResult.plan``.  ``compact=True`` enables early-exit
-        compaction between hops, ``"auto"`` lets the plan decide
-        (identical verdicts either way; the dense ``compact=False``
-        path remains the reference).  All backends are bit-identical,
-        so routing can only change speed, never results.
+        Whenever a :class:`repro.tuning.Plan` decided the route it is
+        attached as ``EngineResult.plan``.  ``compact=True`` enables
+        early-exit compaction between hops, ``"auto"`` lets the plan
+        decide (identical verdicts either way; the dense
+        ``compact=False`` path remains the reference).  All backends
+        are bit-identical, so routing can only change speed, never
+        results.
         """
-        impl = impl or self.impl
-        if impl in ("auto", "tuned") or compact == "auto":
+        opt = _legacy_options(options, {"impl": impl, "compact": compact})
+        if opt.plan is not None:
+            return self._run_plan(opt.plan, win_pkts, with_trace)
+        impl = opt.impl or self.impl
+        if impl in ("auto", "tuned") or opt.compact == "auto":
             from repro.tuning import get_plan
-            plan = get_plan(self, win_pkts, impl=impl, compact=compact)
-            res = backend_for_plan(plan).run(
-                self, win_pkts, with_trace=with_trace,
-                compact=plan.compact, compact_floor=plan.compact_floor)
-            res.plan = plan
-            return res
-        return get_backend(impl).run(
-            self, win_pkts, with_trace=with_trace, compact=compact)
+            plan = get_plan(self, win_pkts, impl=impl, compact=opt.compact)
+            return self._run_plan(plan, win_pkts, with_trace)
+        if impl == "pallas" and opt.block_b is not None:
+            backend = pallas_backend(opt.block_b)
+        else:
+            backend = get_backend(impl)
+        return backend.run(self, win_pkts, with_trace=with_trace,
+                           compact=bool(opt.compact),
+                           compact_floor=opt.compact_floor)
+
+    def _run_plan(self, plan, win_pkts: np.ndarray,
+                  with_trace: bool) -> EngineResult:
+        res = backend_for_plan(plan).run(
+            self, win_pkts, with_trace=with_trace,
+            compact=plan.compact, compact_floor=plan.compact_floor)
+        res.plan = plan
+        return res
 
     # ------------------------------------------------------------------
     # streaming path (batches far beyond one device batch)
     # ------------------------------------------------------------------
     def run_streaming(self, win_pkts: np.ndarray, *,
-                      micro_batch: int = 4096,
-                      donate: bool | None = None,
-                      mesh=None,
-                      impl: str | None = None,
-                      inflight: int = 2,
-                      compact: bool | str = False) -> EngineResult:
+                      options: EngineOptions | None = None,
+                      micro_batch=_UNSET,
+                      donate=_UNSET,
+                      mesh=_UNSET,
+                      impl=_UNSET,
+                      inflight=_UNSET,
+                      compact=_UNSET) -> EngineResult:
         """Chunk ``win_pkts`` into fixed-size padded micro-batches and
-        run each through a walk backend; with ``mesh`` the micro-batch
-        fans out across the mesh's flow-batch axis via ``shard_map``.
-        ``compact=True`` early-exit-compacts each chunk's walk;
-        ``impl="auto"``/``"tuned"`` resolve the chunk's plan through
-        ``repro.tuning``.  See ``repro.serve.streaming``."""
+        run each through a walk backend; with ``options.mesh`` the
+        micro-batch fans out across the mesh's flow-batch axis via
+        ``shard_map``.  ``options.compact`` early-exit-compacts each
+        chunk's walk; ``options.impl="auto"``/``"tuned"`` resolve the
+        chunk's plan through ``repro.tuning``.  Legacy keywords are
+        deprecated shims for ``options=``.  See
+        ``repro.serve.streaming``."""
+        opt = _legacy_options(options, {
+            "micro_batch": micro_batch, "donate": donate, "mesh": mesh,
+            "impl": impl, "inflight": inflight, "compact": compact})
         from repro.serve.streaming import run_streaming
-        return run_streaming(self, win_pkts, micro_batch=micro_batch,
-                             donate=donate, mesh=mesh, impl=impl,
-                             inflight=inflight, compact=compact)
+        return run_streaming(self, win_pkts, options=opt)
 
     # ------------------------------------------------------------------
     # looped path (per-partition host sync; per-op dispatch + baseline)
     # ------------------------------------------------------------------
     def run_looped(self, win_pkts: np.ndarray, *, with_trace: bool = True,
-                   compact: bool = False) -> EngineResult:
+                   options: EngineOptions | None = None,
+                   compact=_UNSET) -> EngineResult:
+        opt = _legacy_options(options, {"compact": compact})
         return LOOPED_BACKEND.run(self, win_pkts, with_trace=with_trace,
-                                  compact=compact)
+                                  compact=bool(opt.compact))

@@ -29,6 +29,29 @@ from repro.kernels.ref import ordered_wsum
 BLOCK_B = 128
 
 
+def _packet_mask_val(pkt, pred, field, k):
+    """One packet per row: (mask (n, k) bool, val (n, k) f32).
+
+    The per-packet slice of the window kernel's predicate/field logic —
+    the same branchless ops, minus the W axis."""
+    n = pkt.shape[0]
+    valid = pkt[:, F.PKT_VALID] > 0                        # (n,)
+    direc = pkt[:, F.PKT_DIR]
+    flags = pkt[:, F.PKT_FLAGS].astype(jnp.int32)
+    v = valid[:, None]
+    mask = v & (pred == F.PRED_TRUE)
+    mask |= v & (pred == F.PRED_FWD) & (direc[:, None] == 0)
+    mask |= v & (pred == F.PRED_BWD) & (direc[:, None] == 1)
+    for code, bit in ((F.PRED_SYN, F.FLAG_SYN), (F.PRED_ACK, F.FLAG_ACK),
+                      (F.PRED_FIN, F.FLAG_FIN), (F.PRED_RST, F.FLAG_RST),
+                      (F.PRED_PSH, F.FLAG_PSH), (F.PRED_URG, F.FLAG_URG)):
+        mask |= v & (pred == code) & ((flags[:, None] & bit) > 0)
+    val = jnp.zeros((n, k), jnp.float32)
+    for c in range(F.PKT_NFIELDS):
+        val = jnp.where(field == c, pkt[:, c][:, None], val)
+    return mask, val
+
+
 def _kernel(pkts_ref, op_ref, field_ref, pred_ref, init_ref, out_ref):
     pkts = pkts_ref[...]                                   # (Bb, W, F)
     op = op_ref[...]                                       # (Bb, k)
@@ -123,3 +146,109 @@ def feature_window_pallas(
         interpret=interpret,
     )(pkts, slot_op, slot_field, slot_pred, slot_init)
     return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# incremental per-packet update step (flow-table serving)
+# ---------------------------------------------------------------------------
+#
+# The live flow table folds ONE packet at a time into resident per-slot
+# window state ``(acc, seen)`` instead of rebuilding the window — see
+# ``kernels.ref.feature_update_ref`` (the dense oracle, whose docstring
+# carries the bit-identity argument) and docs/PARITY.md.  This kernel
+# is the blocked Pallas form of the same fold: the gathered state rows
+# and the packet batch live in VMEM; the table-wide scatter
+# (gather rows → update → ``.at[slots].set``) happens outside in jnp
+# (``feature_update_at``), mirroring how ``dispatch_dt_traverse`` keeps
+# the routing in XLA and the arithmetic in the kernel.
+
+
+def _update_kernel(pkt_ref, op_ref, field_ref, pred_ref, acc_ref, seen_ref,
+                   acc_out, seen_out):
+    pkt = pkt_ref[...]                                     # (Bb, F)
+    op = op_ref[...]                                       # (Bb, k)
+    field = field_ref[...]
+    pred = pred_ref[...]
+    acc = acc_ref[...]
+    seen = seen_ref[...]
+    k = op.shape[1]
+
+    mask, val = _packet_mask_val(pkt, pred, field, k)
+    mf = mask.astype(jnp.float32)
+    # identical op-by-op folds to feature_update_ref, so the Pallas and
+    # dense paths stay bit-identical packet by packet
+    additive = ((op == F.OP_COUNT) | (op == F.OP_SUM) | (op == F.OP_SUMSQ))
+    contrib = jnp.where(op == F.OP_COUNT, mf,
+                        jnp.where(op == F.OP_SUM, val * mf, val * val * mf))
+    out = jnp.where(additive, acc + contrib, acc)
+    out = jnp.where((op == F.OP_MAX) & mask, jnp.maximum(acc, val), out)
+    out = jnp.where((op == F.OP_MIN) & mask, jnp.minimum(acc, val), out)
+    out = jnp.where((op == F.OP_FIRST) & mask & (seen == 0), val, out)
+    out = jnp.where((op == F.OP_LAST) & mask, val, out)
+    acc_out[...] = out.astype(jnp.float32)
+    seen_out[...] = seen | mask.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def feature_update_pallas(
+    pkt: jnp.ndarray,         # (B, PKT_NFIELDS) f32, ONE packet per row
+    slot_op: jnp.ndarray,     # (B, k) int32 (pre-gathered by SID)
+    slot_field: jnp.ndarray,  # (B, k)
+    slot_pred: jnp.ndarray,   # (B, k)
+    acc: jnp.ndarray,         # (B, k) f32 running window state
+    seen: jnp.ndarray,        # (B, k) int32
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold one packet per row into ``(acc, seen)``; returns new state.
+
+    Padding rows (all-zero packets, valid = 0) pass their state through
+    untouched up to signed zero — the same invariant the window kernel
+    gives padded packets."""
+    B, nf = pkt.shape
+    k = slot_op.shape[1]
+    bb = min(block_b, B)
+    Bp = round_up(B, bb)
+    if Bp != B:
+        pkt, slot_op, slot_field, slot_pred, acc, seen = (
+            pad_axis0(x, Bp)
+            for x in (pkt, slot_op, slot_field, slot_pred, acc, seen))
+    grid = (Bp // bb,)
+    row = pl.BlockSpec((bb, k), lambda i: (i, 0))
+    acc2, seen2 = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, nf), lambda i: (i, 0)),
+                  row, row, row, row, row],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, k), jnp.int32)],
+        interpret=interpret,
+    )(pkt, slot_op, slot_field, slot_pred, acc, seen)
+    return acc2[:B], seen2[:B]
+
+
+def feature_update_at(
+    acc_tab: jnp.ndarray,     # (N, k) f32 resident state table
+    seen_tab: jnp.ndarray,    # (N, k) int32
+    slots: jnp.ndarray,       # (n,) int32 UNIQUE row indices into the table
+    pkt: jnp.ndarray,         # (n, PKT_NFIELDS)
+    slot_op: jnp.ndarray,     # (n, k) — pre-gathered for each slot's SID
+    slot_field: jnp.ndarray,
+    slot_pred: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter-update: fold one packet into each addressed table row.
+
+    Gather the state rows, run the Pallas update step, scatter the new
+    state back.  ``slots`` must address each real row at most once per
+    call (the flow table's rank batches guarantee it); duplicate
+    *padding* indices are safe — padded rows compute identical values,
+    so the scatter is order-independent."""
+    a2, s2 = feature_update_pallas(
+        pkt, slot_op, slot_field, slot_pred, acc_tab[slots], seen_tab[slots],
+        interpret=interpret, block_b=block_b)
+    return acc_tab.at[slots].set(a2), seen_tab.at[slots].set(s2)

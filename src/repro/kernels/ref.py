@@ -107,6 +107,89 @@ def feature_window_ref(
 
 
 # ---------------------------------------------------------------------------
+# feature_update: incremental per-packet window state (flow-table serving)
+# ---------------------------------------------------------------------------
+#
+# The live flow table (repro.serve.flowtable) cannot rebuild a window
+# from scratch on every packet, so the window reduction is re-expressed
+# as a left fold over arrival order with per-slot state ``(acc, seen)``.
+# Bit-identity with :func:`feature_window_ref` (docs/PARITY.md) follows
+# from the reduction orders being the SAME chain:
+#
+#   * COUNT/SUM/SUMSQ: ``ordered_wsum`` is the left-to-right f32 chain
+#     ``x0 + x1 + ...``; the fold computes ``0.0 + x0 + x1 + ...`` and
+#     skips the trailing padding terms — both differences only map
+#     ``-0.0`` to ``+0.0`` (``0.0 + x == x`` for every other f32), and
+#     signed zeros compare equal everywhere downstream (thresholds,
+#     ``assert_array_equal``);
+#   * MAX/MIN are order-independent; the fold carries the same
+#     ±inf "empty" sentinel the reference builds via where(mask);
+#   * FIRST latches on the first masked packet, LAST overwrites on
+#     every masked packet — exactly the reference's index selects;
+#   * finalisation reproduces the reference's empty-window fallbacks
+#     (MAX→0, MIN→slot_init, FIRST/LAST→0) from the ``seen`` bit.
+
+
+def feature_state_init(slot_op: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blank per-slot window state for the incremental fold.
+
+    ``slot_op`` (n, k) op codes -> ``(acc (n, k) f32, seen (n, k)
+    int32)``.  MAX/MIN start at the identity of their reduction (∓inf);
+    every additive op starts at 0.0 (the same +0.0 the reference
+    chain's padding terms produce).
+    """
+    acc = jnp.where(slot_op == F.OP_MAX, -jnp.inf,
+                    jnp.where(slot_op == F.OP_MIN, jnp.inf, 0.0))
+    return acc.astype(jnp.float32), jnp.zeros(slot_op.shape, jnp.int32)
+
+
+def feature_update_ref(
+    pkt: jnp.ndarray,        # (n, PKT_NFIELDS) ONE packet per flow/slot
+    slot_op: jnp.ndarray,    # (n, k) per-slot op codes (gathered by SID)
+    slot_field: jnp.ndarray, # (n, k)
+    slot_pred: jnp.ndarray,  # (n, k)
+    acc: jnp.ndarray,        # (n, k) f32 running state
+    seen: jnp.ndarray,       # (n, k) int32 "any masked packet yet" bit
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold one packet per row into the running window state.
+
+    Invalid packets (valid = 0 — e.g. padding rows in a batched scatter
+    update) leave the state unchanged up to signed zero, exactly like
+    the reference chain's masked terms.  Returns the new ``(acc,
+    seen)``.
+    """
+    mask = _pred_mask(pkt[:, None, :], slot_pred)[:, 0]      # (n, k)
+    val = _field_vals(pkt[:, None, :], slot_field)[:, 0]     # (n, k)
+    mf = mask.astype(jnp.float32)
+    op = slot_op
+    additive = ((op == F.OP_COUNT) | (op == F.OP_SUM) | (op == F.OP_SUMSQ))
+    contrib = jnp.where(op == F.OP_COUNT, mf,
+                        jnp.where(op == F.OP_SUM, val * mf, val * val * mf))
+    out = jnp.where(additive, acc + contrib, acc)
+    out = jnp.where((op == F.OP_MAX) & mask, jnp.maximum(acc, val), out)
+    out = jnp.where((op == F.OP_MIN) & mask, jnp.minimum(acc, val), out)
+    out = jnp.where((op == F.OP_FIRST) & mask & (seen == 0), val, out)
+    out = jnp.where((op == F.OP_LAST) & mask, val, out)
+    return out.astype(jnp.float32), seen | mask.astype(jnp.int32)
+
+
+def feature_finalize_ref(
+    acc: jnp.ndarray,        # (n, k) f32 folded state
+    seen: jnp.ndarray,       # (n, k) int32
+    slot_op: jnp.ndarray,    # (n, k)
+    slot_init: jnp.ndarray,  # (n, k) f32 (MIN's empty-window fallback)
+) -> jnp.ndarray:
+    """Folded state -> registers, bit-identical to the rebuilt window."""
+    op = slot_op
+    empty = seen == 0
+    out = jnp.where((op == F.OP_MAX) & empty, 0.0, acc)
+    out = jnp.where((op == F.OP_MIN) & empty, slot_init, out)
+    out = jnp.where(((op == F.OP_FIRST) | (op == F.OP_LAST)) & empty,
+                    0.0, out)
+    return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # dt_traverse: range-mark matching (grouped by SID outside the kernel)
 # ---------------------------------------------------------------------------
 

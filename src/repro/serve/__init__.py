@@ -1,0 +1,31 @@
+"""Serving surface: batch streaming + live flow-table inference.
+
+One import path for everything a serving deployment touches — the
+unified :class:`~repro.core.inference.EngineOptions` knobs, the batch
+micro-batching pipeline (``run_streaming`` / ``stream_batches``) and
+the per-packet :class:`FlowTableServer`.  The LM-serving prototypes
+(``serve.batching`` / ``serve.serve_step``) stay out of this namespace
+so importing ``repro.serve`` never pulls their heavier dependencies.
+"""
+from repro.core.inference import Engine, EngineOptions, EngineResult
+from repro.serve.flowtable import (
+    FlowTable,
+    FlowTableServer,
+    ServerStats,
+    StreamVerdict,
+    StreamVerdicts,
+)
+from repro.serve.streaming import run_streaming, stream_batches
+
+__all__ = [
+    "Engine",
+    "EngineOptions",
+    "EngineResult",
+    "FlowTable",
+    "FlowTableServer",
+    "ServerStats",
+    "StreamVerdict",
+    "StreamVerdicts",
+    "run_streaming",
+    "stream_batches",
+]

@@ -1,0 +1,631 @@
+"""Device-resident flow table: per-packet streaming inference.
+
+The paper's data plane keeps per-flow feature registers in a fixed
+register pool, updates them on EVERY packet, and runs the active
+subtree when a window boundary passes (paper §3.1, Fig. 4).  The batch
+engine (``core.inference``) scores complete flow windows after the
+fact; this module is the live analogue — the ROADMAP's "millions of
+users, heavy traffic" direction:
+
+  * a **hash-indexed slot table** (``FlowTable``) admits flows into a
+    fixed pool of ``n_buckets * bucket_size`` slots (bucketed hashing
+    with linear bucket probing — the register-pool analogue of
+    ``kernels.dispatch``'s capacity blocks: a static capacity bound
+    with data-dependent routing).  When every probe fails the flow
+    falls back to a host-side spill store instead of being dropped;
+  * **incremental window state** lives on device: per-slot ``(acc,
+    seen)`` registers folded one packet at a time by the update-step
+    kernel (``kernels.feature_window.feature_update_pallas`` /
+    ``kernels.ref.feature_update_ref``) — no window rebuild per packet,
+    bit-identical to the rebuilt window per docs/PARITY.md;
+  * when a flow's window completes, the tick's completed flows hop as
+    ONE batch: finalize registers → subtree traversal → the SAME
+    ``core.inference._hop_update`` bookkeeping the partition walk uses
+    (exit / recirculate / ``-1`` sentinels);
+  * **timeout eviction** emits mid-stream verdicts for idle flows with
+    the ``-1`` sentinel convention (labels / exit_partition), keeping
+    the accumulated recirculation count.
+
+``FlowTableServer.ingest(packets) -> StreamVerdicts`` is the entry
+point; packets arrive as arrival-ordered ticks (see
+``flows.synthetic.make_packet_stream``).  Within a tick, packets are
+processed in per-slot "ranks" (the r-th packet of each flow), so every
+device scatter addresses each slot at most once and per-flow arrival
+order — the reduction order the parity contract pins — is preserved.
+Rank batches are padded to a power-of-two capacity ladder (a dummy
+table row absorbs the padding) so jit compiles a handful of shapes,
+not one per tick.
+
+Execution knobs come from :class:`repro.core.inference.EngineOptions`:
+``impl`` picks the fold/traverse kernels (``fused`` = dense jnp,
+``pallas`` = the Pallas scatter-update + SID-dispatched traverse;
+``auto``/``tuned`` resolve a ``repro.tuning.Plan`` for the table
+shape), ``block_b`` the Pallas block size.  All routes are
+bit-identical to ``Engine.run`` on the offline windows — the flow
+table can only change *when* a verdict is computed, never its value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import PKT_IAT, PKT_NFIELDS
+from repro.core.inference import Engine, EngineOptions, _hop_update
+from repro.flows.windows import window_bounds
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+from repro.kernels.dispatch import dispatch_dt_traverse
+from repro.kernels.dt_traverse import BLOCK_B
+from repro.kernels.feature_window import feature_update_at
+
+
+# ---------------------------------------------------------------------------
+# results — same field contract as core.inference.EngineResult
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StreamVerdicts:
+    """Verdicts emitted by one ``ingest``/``flush`` call.
+
+    Field contract matches :class:`repro.core.inference.EngineResult`
+    (``labels`` / ``recircs`` / ``exit_partition`` int32 with ``-1``
+    sentinels, ``plan``, ``n_unterminated``) plus ``flow_id`` — stream
+    verdicts arrive in completion order, not batch order, so each row
+    names its flow.
+    """
+    flow_id: np.ndarray          # (n,) int64 flow key per verdict
+    labels: np.ndarray           # (n,) int32; -1 = never took an exit action
+    recircs: np.ndarray          # (n,) int32 partition transitions
+    exit_partition: np.ndarray   # (n,) int32; -1 sentinel as above
+    plan: "object | None" = None  # repro.tuning.Plan when routing resolved one
+
+    @property
+    def n_flows(self) -> int:
+        return int(self.flow_id.shape[0])
+
+    @property
+    def n_unterminated(self) -> int:
+        """Flows evicted or flushed without an exit action (-1 rows)."""
+        return int(np.count_nonzero(np.asarray(self.exit_partition) < 0))
+
+    @classmethod
+    def empty(cls, plan=None) -> "StreamVerdicts":
+        return cls(np.empty(0, np.int64), np.empty(0, np.int32),
+                   np.empty(0, np.int32), np.empty(0, np.int32), plan=plan)
+
+    @classmethod
+    def concat(cls, parts) -> "StreamVerdicts":
+        """Concatenate per-tick verdicts (keeps the first non-None plan)."""
+        parts = list(parts)
+        if not parts:
+            return cls.empty()
+        plan = next((p.plan for p in parts if p.plan is not None), None)
+        return cls(
+            np.concatenate([p.flow_id for p in parts]),
+            np.concatenate([p.labels for p in parts]),
+            np.concatenate([p.recircs for p in parts]),
+            np.concatenate([p.exit_partition for p in parts]),
+            plan=plan)
+
+
+#: Singular alias — the per-flow row type and the batch share one shape.
+StreamVerdict = StreamVerdicts
+
+
+class _VerdictAccum:
+    """Append-only verdict builder (python lists -> int arrays once)."""
+
+    def __init__(self):
+        self.flow_id: list[int] = []
+        self.labels: list[int] = []
+        self.recircs: list[int] = []
+        self.exit_p: list[int] = []
+
+    def add(self, fid, label, rec, exitp) -> None:
+        self.flow_id.append(int(fid))
+        self.labels.append(int(label))
+        self.recircs.append(int(rec))
+        self.exit_p.append(int(exitp))
+
+    def build(self, plan) -> StreamVerdicts:
+        return StreamVerdicts(
+            np.asarray(self.flow_id, np.int64),
+            np.asarray(self.labels, np.int32),
+            np.asarray(self.recircs, np.int32),
+            np.asarray(self.exit_p, np.int32), plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# host hash index (bucketed, linear bucket probing, never drops)
+# ---------------------------------------------------------------------------
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finaliser — cheap, well-mixed bucket hashing."""
+    x = np.asarray(x).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        x = x + np.uint64(0x9E3779B97F4A7C15)
+        x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return x ^ (x >> np.uint64(31))
+
+
+class FlowTable:
+    """Fixed-capacity hash index over the device slot array.
+
+    ``capacity = n_buckets * bucket_size`` slots; a flow key hashes to
+    a home bucket and takes the first free slot there, probing
+    subsequent buckets (wrapping) on overflow — the data-plane analogue
+    is a multi-way register hash table.  ``insert`` returns ``None``
+    only when the WHOLE table is full; the server then spills to the
+    host instead of dropping the flow.
+    """
+
+    def __init__(self, n_buckets: int, bucket_size: int):
+        if n_buckets <= 0 or bucket_size <= 0:
+            raise ValueError("n_buckets and bucket_size must be positive")
+        self.n_buckets = n_buckets
+        self.bucket_size = bucket_size
+        self.capacity = n_buckets * bucket_size
+        self.key = np.full(self.capacity, -1, np.int64)   # -1 = free slot
+        self._slot_of: dict[int, int] = {}
+        self.probe_overflows = 0    # inserts that left their home bucket
+
+    @property
+    def resident(self) -> int:
+        return len(self._slot_of)
+
+    def lookup(self, key: int) -> int | None:
+        return self._slot_of.get(key)
+
+    def insert(self, key: int) -> int | None:
+        b0 = int(_mix64(np.int64(key)) % np.uint64(self.n_buckets))
+        for probe in range(self.n_buckets):
+            b = (b0 + probe) % self.n_buckets
+            base = b * self.bucket_size
+            free = np.nonzero(
+                self.key[base:base + self.bucket_size] == -1)[0]
+            if free.size:
+                if probe:
+                    self.probe_overflows += 1
+                slot = base + int(free[0])
+                self.key[slot] = key
+                self._slot_of[key] = slot
+                return slot
+        return None
+
+    def free(self, slot: int) -> None:
+        key = int(self.key[slot])
+        del self._slot_of[key]
+        self.key[slot] = -1
+
+
+@dataclasses.dataclass
+class _SpillFlow:
+    """Host fallback for flows the hash table could not place.
+
+    Packets are buffered and the completed flow runs through the batch
+    engine's full-window walk — bit-identical verdicts (the parity
+    contract makes incremental vs rebuilt windows indistinguishable),
+    just computed late.  A spilled flow evicted before completion never
+    ran a hop, so it reports zero recirculations with its sentinels.
+    """
+    length: int
+    rows: list = dataclasses.field(default_factory=list)
+    last_ts: float = -np.inf
+
+
+@dataclasses.dataclass
+class ServerStats:
+    packets: int = 0             # packets ingested (resident + spilled)
+    flows_seen: int = 0          # distinct flows admitted or spilled
+    verdicts: int = 0            # verdicts emitted (incl. sentinels)
+    spilled: int = 0             # flows that fell back to the host store
+    evicted: int = 0             # timeout evictions (mid-stream sentinels)
+    peak_resident: int = 0       # max concurrent flows (slots + spill)
+
+
+# ---------------------------------------------------------------------------
+# jitted device steps (module level: compile cache shared across servers)
+# ---------------------------------------------------------------------------
+def _pow2_cap(n: int, floor: int) -> int:
+    """Smallest power-of-two >= n (>= floor) — the rank/hop batch
+    capacity ladder, so jit sees a handful of shapes per table."""
+    cap = max(int(floor), 1)
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _blank_state(dev: ops.DeviceTables, n: int):
+    """(acc, seen) for ``n`` rows, initialised for the root SID 0."""
+    op = jnp.broadcast_to(dev.slot_op[0][None, :],
+                          (n, dev.slot_op.shape[1]))
+    return _ref.feature_state_init(op)
+
+
+@jax.jit
+def _reset_rows(acc, seen, slots, sid_rows, dev):
+    """Re-initialise the addressed rows for their (new) SID's ops."""
+    a0, s0 = _ref.feature_state_init(dev.slot_op[sid_rows])
+    return acc.at[slots].set(a0), seen.at[slots].set(s0)
+
+
+@functools.partial(jax.jit, static_argnames=("pallas", "block_b"))
+def _fold_rank(acc, seen, pkt, sid_rows, slots, dev, *,
+               pallas: bool, block_b: int):
+    """Fold one rank (<= 1 packet per slot) into the resident state.
+
+    Padding entries address the dummy row with an invalid packet; all
+    compute identical values, so the duplicate scatter is
+    deterministic.
+    """
+    op = dev.slot_op[sid_rows]
+    fld = dev.slot_field[sid_rows]
+    prd = dev.slot_pred[sid_rows]
+    if pallas:
+        return feature_update_at(acc, seen, slots, pkt, op, fld, prd,
+                                 interpret=not ops._on_tpu(),
+                                 block_b=block_b)
+    a2, s2 = _ref.feature_update_ref(pkt, op, fld, prd,
+                                     acc[slots], seen[slots])
+    return acc.at[slots].set(a2), seen.at[slots].set(s2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_subtrees", "pallas", "block_b"))
+def _hop_rank(acc, seen, slots, sid_rows, p_rows, rec_rows, dev, *,
+              n_subtrees: int, pallas: bool, block_b: int):
+    """One recirculation hop for the slots whose window just completed.
+
+    Finalize the folded registers, traverse the active subtree, and run
+    the walk's own ``_hop_update`` bookkeeping with this batch's
+    per-flow partition indices; the hopped rows are re-initialised for
+    their post-hop SID (exited rows are reset too — harmless, their
+    slots are freed host-side).  Returns the updated state tables plus
+    ``(labels, done, sid, recircs, exit_partition)`` for the host.
+    """
+    op = dev.slot_op[sid_rows]
+    init = dev.slot_init[sid_rows]
+    regs = _ref.feature_finalize_ref(acc[slots], seen[slots], op, init)
+    if pallas:
+        action = dispatch_dt_traverse(
+            regs, sid_rows, dev.thresholds, dev.leaf_lo, dev.leaf_hi,
+            dev.leaf_action, dev.leaf_valid,
+            interpret=not ops._on_tpu(), block_b=block_b)
+    else:
+        action = _ref.dt_traverse_ref(
+            regs, dev.thresholds[sid_rows], dev.leaf_lo[sid_rows],
+            dev.leaf_hi[sid_rows], dev.leaf_action[sid_rows],
+            dev.leaf_valid[sid_rows] > 0)
+    carry = (sid_rows,
+             jnp.zeros(sid_rows.shape, jnp.bool_),
+             jnp.full(sid_rows.shape, -1, jnp.int32),
+             rec_rows,
+             jnp.full(sid_rows.shape, -1, jnp.int32))
+    sid2, done, labels, rec2, exit_p = _hop_update(
+        carry, p_rows, action, n_subtrees)
+    a0, s0 = _ref.feature_state_init(dev.slot_op[sid2])
+    return (acc.at[slots].set(a0), seen.at[slots].set(s0),
+            labels, done, sid2, rec2, exit_p)
+
+
+def _resolve_exec(engine: Engine, opt: EngineOptions, capacity: int):
+    """EngineOptions -> (pallas?, block_b, plan) for the serving steps.
+
+    ``auto``/``tuned`` resolve a walk-backend ``Plan`` for the table's
+    shape through ``repro.tuning`` (no probe windows exist yet, so
+    ``tuned`` degrades to the cost model); only the plan's backend and
+    ``block_b`` apply — per-hop batches are already survivor-compacted
+    by construction, so the compaction knob is inert here.
+    """
+    plan = opt.plan
+    impl = opt.impl or engine.impl
+    if plan is None and impl in ("auto", "tuned"):
+        from repro.tuning import ShapeInfo, get_plan
+        shape = ShapeInfo.from_engine(engine, None, B=capacity, W=1)
+        plan = get_plan(engine, None, impl=impl, shape=shape,
+                        backends=("fused", "pallas"), compact=False)
+    if plan is not None:
+        if plan.backend not in ("fused", "pallas"):
+            raise ValueError(
+                "flow-table serving requires a walk backend (fused or "
+                f"pallas); plan backend {plan.backend!r} syncs per hop")
+        return plan.backend == "pallas", plan.block_b, plan
+    if impl == "ref":
+        impl = "fused"
+    if impl not in ("fused", "pallas"):
+        raise ValueError(
+            "flow-table serving requires a walk backend (fused or "
+            f"pallas); got impl={impl!r}")
+    return impl == "pallas", opt.block_b or BLOCK_B, None
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+class FlowTableServer:
+    """Per-packet streaming inference behind a resident flow table.
+
+    ``ingest`` consumes arrival-ordered packet ticks
+    (``flows.synthetic.PacketBatch``) and returns the
+    :class:`StreamVerdicts` that completed during the tick; ``flush``
+    evicts everything still resident (``-1`` sentinels for flows whose
+    stream ended mid-window).  With ``timeout`` set, flows idle longer
+    than ``timeout`` seconds of stream time are evicted at tick
+    boundaries the same way.
+
+    Each flow key is served exactly once: after its verdict (exit,
+    flush, or timeout) the key is retired and late packets for it are
+    dropped.  The retired set grows with the number of completed flows;
+    callers running unbounded streams should recreate the server
+    per epoch.
+    """
+
+    def __init__(self, engine: Engine, *, n_buckets: int = 64,
+                 bucket_size: int = 8, timeout: float | None = None,
+                 options: EngineOptions | None = None,
+                 rank_floor: int = 64):
+        self.engine = engine
+        self.options = options or EngineOptions()
+        self.timeout = timeout
+        self.table = FlowTable(n_buckets, bucket_size)
+        self.P = engine.tables.n_partitions
+        self.S = engine.ret.n_subtrees
+        self._rank_floor = int(rank_floor)
+        self._pallas, self._block_b, self._plan = _resolve_exec(
+            engine, self.options, self.table.capacity)
+        # spilled flows run the batch walk; pin the same backend family
+        self._spill_options = EngineOptions(
+            impl="pallas" if self._pallas else "fused",
+            block_b=self._block_b if self._pallas else None)
+
+        N = self.table.capacity
+        self._dummy = N                       # padding scatters land here
+        self._acc, self._seen = _blank_state(engine.dev, N + 1)
+        self._sid = np.zeros(N, np.int32)
+        self._part = np.zeros(N, np.int32)
+        self._win_lo = np.zeros(N, np.int32)
+        self._win_hi = np.zeros(N, np.int32)
+        self._pkts_seen = np.zeros(N, np.int32)
+        self._recircs = np.zeros(N, np.int32)
+        self._last_ts = np.full(N, -np.inf, np.float64)
+        self._bounds = np.zeros((N, self.P, 2), np.int32)
+        self._spill: dict[int, _SpillFlow] = {}
+        self._retired: set[int] = set()
+        self.stats = ServerStats()
+
+    # -- admission ------------------------------------------------------
+    @property
+    def resident_flows(self) -> int:
+        """Concurrent flows currently held (slots + host spill)."""
+        return self.table.resident + len(self._spill)
+
+    def _admit(self, slot: int, length: int) -> None:
+        length = max(int(length), 1)
+        b = np.asarray(window_bounds(length, self.P), np.int32)
+        self._bounds[slot] = b
+        self._sid[slot] = 0
+        self._part[slot] = 0
+        self._win_lo[slot], self._win_hi[slot] = b[0]
+        self._pkts_seen[slot] = 0
+        self._recircs[slot] = 0
+        self._last_ts[slot] = -np.inf
+        self.stats.flows_seen += 1
+
+    def _evict(self, slot: int) -> None:
+        self._retired.add(int(self.table.key[slot]))
+        self.table.free(slot)
+
+    # -- ingest ---------------------------------------------------------
+    def ingest(self, batch) -> StreamVerdicts:
+        """Fold one tick of packet arrivals; return completed verdicts."""
+        fid = np.asarray(batch.flow_id, np.int64)
+        flen = np.asarray(batch.flow_len, np.int64)
+        pk = np.asarray(batch.pkts, np.float32)
+        arr = np.asarray(batch.arrival, np.float64)
+        n = int(fid.shape[0])
+        self.stats.packets += n
+        out = _VerdictAccum()
+
+        # route every packet: resident slot, spill store, or retired-drop
+        slot_pk = np.full(n, -1, np.int64)
+        admitted: list[int] = []
+        for i in range(n):
+            key = int(fid[i])
+            if key in self._retired:
+                continue
+            slot = self.table.lookup(key)
+            if slot is None:
+                if key in self._spill:
+                    slot_pk[i] = -2
+                    continue
+                slot = self.table.insert(key)
+                if slot is None:          # table full: host fallback
+                    self._spill[key] = _SpillFlow(length=int(flen[i]))
+                    self.stats.spilled += 1
+                    self.stats.flows_seen += 1
+                    slot_pk[i] = -2
+                    continue
+                self._admit(slot, int(flen[i]))
+                admitted.append(slot)
+            slot_pk[i] = slot
+        self.stats.peak_resident = max(self.stats.peak_resident,
+                                       self.resident_flows)
+        if admitted:
+            # recycled slots carry the previous tenant's state/SID init
+            self._reset_admitted(np.asarray(sorted(set(admitted)), np.int64))
+
+        spill_rows = np.nonzero(slot_pk == -2)[0]
+        for i in spill_rows:
+            f = self._spill[int(fid[i])]
+            f.rows.append(pk[i])
+            f.last_ts = max(f.last_ts, float(arr[i]))
+
+        res_rows = np.nonzero(slot_pk >= 0)[0]
+        if res_rows.size:
+            self._process_resident(slot_pk[res_rows], fid[res_rows],
+                                   pk[res_rows], arr[res_rows], out)
+        self._run_spilled_complete(out)
+        if self.timeout is not None and n:
+            self._evict_timeouts(float(arr.max()), out)
+        self.stats.verdicts += len(out.flow_id)
+        return out.build(self._plan)
+
+    def flush(self) -> StreamVerdicts:
+        """End of stream: evict every resident flow with sentinels."""
+        out = _VerdictAccum()
+        self._run_spilled_complete(out)
+        for slot in np.nonzero(self.table.key >= 0)[0]:
+            out.add(self.table.key[slot], -1, self._recircs[slot], -1)
+            self._evict(int(slot))
+        for key in list(self._spill):
+            out.add(key, -1, 0, -1)
+            del self._spill[key]
+            self._retired.add(key)
+        self.stats.verdicts += len(out.flow_id)
+        return out.build(self._plan)
+
+    # -- device plumbing ------------------------------------------------
+    def _pad_slots(self, s: np.ndarray) -> tuple[int, np.ndarray]:
+        cap = _pow2_cap(s.size, self._rank_floor)
+        slots = np.full(cap, self._dummy, np.int32)
+        slots[:s.size] = s
+        return cap, slots
+
+    def _reset_admitted(self, s: np.ndarray) -> None:
+        cap, slots = self._pad_slots(s)
+        self._acc, self._seen = _reset_rows(
+            self._acc, self._seen, jnp.asarray(slots),
+            jnp.zeros(cap, jnp.int32), self.engine.dev)
+
+    def _process_resident(self, slots, fids, pkts, arr, out) -> None:
+        np.maximum.at(self._last_ts, slots, arr)
+        # rank r = the r-th packet of a flow within this tick: every
+        # rank addresses each slot at most once (unique-scatter), and
+        # rank order preserves per-flow arrival order (stable argsort)
+        order = np.argsort(slots, kind="stable")
+        ss = slots[order]
+        new_grp = np.r_[True, ss[1:] != ss[:-1]]
+        grp_start = np.nonzero(new_grp)[0]
+        grp_id = np.cumsum(new_grp) - 1
+        rank = np.arange(ss.size) - grp_start[grp_id]
+        for r in range(int(rank.max()) + 1):
+            sel = order[rank == r]
+            s = slots[sel]
+            # a flow that exited earlier this tick frees its slot; any
+            # later packets of it (malformed flow_len) must not fold
+            # into the slot's next tenant
+            alive = self.table.key[s] == fids[sel]
+            sel, s = sel[alive], s[alive]
+            if not s.size:
+                continue
+            p = pkts[sel].copy()
+            # window boundary clears the dependency chain (first-packet
+            # IAT = 0), matching flows.windows.window_packets
+            p[self._pkts_seen[s] == self._win_lo[s], PKT_IAT] = 0.0
+            self._fold(s, p)
+            self._pkts_seen[s] += 1
+            complete = s[self._pkts_seen[s] == self._win_hi[s]]
+            if complete.size:
+                self._hop_drain(complete, out)
+
+    def _fold(self, s: np.ndarray, p: np.ndarray) -> None:
+        cap, slots = self._pad_slots(s)
+        sid = np.zeros(cap, np.int32)
+        sid[:s.size] = self._sid[s]
+        pkt = np.zeros((cap, PKT_NFIELDS), np.float32)
+        pkt[:s.size] = p
+        self._acc, self._seen = _fold_rank(
+            self._acc, self._seen, jnp.asarray(pkt), jnp.asarray(sid),
+            jnp.asarray(slots), self.engine.dev,
+            pallas=self._pallas, block_b=self._block_b)
+
+    def _hop_drain(self, s: np.ndarray, out: _VerdictAccum) -> None:
+        """Hop the completed slots; drain any windows that complete
+        immediately after (flows shorter than P packets have empty
+        trailing windows — the walk still traverses them, so we do
+        too).  Terminates: every drain round advances the partition."""
+        while s.size:
+            cap, slots = self._pad_slots(s)
+            sid = np.zeros(cap, np.int32)
+            sid[:s.size] = self._sid[s]
+            p_rows = np.zeros(cap, np.int32)
+            p_rows[:s.size] = self._part[s]
+            rec = np.zeros(cap, np.int32)
+            rec[:s.size] = self._recircs[s]
+            res = _hop_rank(
+                self._acc, self._seen, jnp.asarray(slots),
+                jnp.asarray(sid), jnp.asarray(p_rows), jnp.asarray(rec),
+                self.engine.dev, n_subtrees=self.S,
+                pallas=self._pallas, block_b=self._block_b)
+            self._acc, self._seen = res[0], res[1]
+            labels, done, sid2, rec2, exit_p = (
+                np.asarray(a)[:s.size] for a in jax.device_get(res[2:]))
+            nxt: list[int] = []
+            for j, slot in enumerate(s):
+                slot = int(slot)
+                if done[j]:
+                    out.add(self.table.key[slot], labels[j], rec2[j],
+                            exit_p[j])
+                    self._evict(slot)
+                elif self._part[slot] == self.P - 1:
+                    # fell off the last partition: -1 sentinels
+                    out.add(self.table.key[slot], -1, rec2[j], -1)
+                    self._evict(slot)
+                else:
+                    self._sid[slot] = sid2[j]
+                    self._recircs[slot] = rec2[j]
+                    self._part[slot] += 1
+                    lo, hi = self._bounds[slot, self._part[slot]]
+                    self._win_lo[slot] = lo
+                    self._win_hi[slot] = hi
+                    if lo == hi:              # empty window: hop again
+                        nxt.append(slot)
+            s = np.asarray(nxt, np.int64)
+
+    # -- host fallbacks -------------------------------------------------
+    def _run_spilled_complete(self, out: _VerdictAccum) -> None:
+        """Run completed spilled flows through the batch walk."""
+        done = [key for key, f in self._spill.items()
+                if len(f.rows) >= f.length]
+        if not done:
+            return
+        P = self.P
+        all_bounds = {key: window_bounds(self._spill[key].length, P)
+                      for key in done}
+        w_max = max(1, max(hi - lo for b in all_bounds.values()
+                           for lo, hi in b))
+        wp = np.zeros((len(done), P, w_max, PKT_NFIELDS), np.float32)
+        for idx, key in enumerate(done):
+            rows = np.stack(self._spill[key].rows)
+            for w, (lo, hi) in enumerate(all_bounds[key]):
+                if hi <= lo:
+                    continue
+                win = rows[lo:hi].copy()
+                win[0, PKT_IAT] = 0.0
+                wp[idx, w, :hi - lo] = win
+        res = self.engine.run(wp, with_trace=False,
+                              options=self._spill_options)
+        for idx, key in enumerate(done):
+            out.add(key, res.labels[idx], res.recircs[idx],
+                    res.exit_partition[idx])
+            del self._spill[key]
+            self._retired.add(key)
+
+    def _evict_timeouts(self, now: float, out: _VerdictAccum) -> None:
+        stale = np.nonzero((self.table.key >= 0)
+                           & (now - self._last_ts > self.timeout))[0]
+        for slot in stale:
+            slot = int(slot)
+            out.add(self.table.key[slot], -1, self._recircs[slot], -1)
+            self._evict(slot)
+            self.stats.evicted += 1
+        for key, f in list(self._spill.items()):
+            if now - f.last_ts > self.timeout:
+                out.add(key, -1, 0, -1)
+                del self._spill[key]
+                self._retired.add(key)
+                self.stats.evicted += 1

@@ -58,13 +58,17 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
 from repro.core.inference import (
+    _UNSET,
     Engine,
+    EngineOptions,
     EngineResult,
     ExecutionBackend,
     StepFn,
+    _legacy_options,
     _partition_walk,
     backend_for_plan,
     get_backend,
+    pallas_backend,
     partition_walk,
     partition_walk_donated,
 )
@@ -88,22 +92,37 @@ def _walk_backend(engine: Engine, impl: str | None) -> ExecutionBackend:
     return backend
 
 
-def _resolve_backend(engine: Engine, impl: str | None, mesh, mb: int,
-                     compact, win_pkts):
+def _resolve_backend(engine: Engine, opt: EngineOptions, mb: int, win_pkts):
     """Pick the chunk's walk backend; returns (backend, compact,
-    compact_floor, plan).  Fixed impls go straight to
-    :func:`get_backend`; ``auto``/``tuned`` (or ``compact="auto"``)
-    resolve a ``repro.tuning.Plan`` for the CHUNK shape — B is the
-    micro-batch, ``n_devices`` the mesh's data-parallel extent — with
-    candidates restricted to the streamable walk backends."""
-    impl = impl or engine.impl
-    if impl not in ("auto", "tuned") and compact != "auto":
-        return _walk_backend(engine, impl), bool(compact), COMPACT_FLOOR, None
+    compact_floor, plan).  A pre-resolved ``opt.plan`` wins outright;
+    fixed impls go straight to :func:`get_backend` (honouring
+    ``opt.block_b`` for pallas); ``auto``/``tuned`` (or
+    ``compact="auto"``) resolve a ``repro.tuning.Plan`` for the CHUNK
+    shape — B is the micro-batch, ``n_devices`` the mesh's
+    data-parallel extent — with candidates restricted to the
+    streamable walk backends."""
+    if opt.plan is not None:
+        plan = opt.plan
+        backend = backend_for_plan(plan)
+        if backend.step is None:
+            raise ValueError(
+                f"streaming requires a jitted walk backend (fused or "
+                f"pallas); plan backend {plan.backend!r} syncs the host "
+                "every partition")
+        return backend, plan.compact, plan.compact_floor, plan
+    impl = opt.impl or engine.impl
+    if impl not in ("auto", "tuned") and opt.compact != "auto":
+        if impl == "pallas" and opt.block_b is not None:
+            backend = pallas_backend(opt.block_b)
+        else:
+            backend = _walk_backend(engine, impl)
+        return backend, bool(opt.compact), opt.compact_floor, None
     from repro.tuning import ShapeInfo, get_plan
+    mesh = opt.mesh
     n_dev = flow_batch_devices(mesh) if mesh is not None else 1
     shape = ShapeInfo.from_engine(engine, win_pkts, B=mb, n_devices=n_dev)
     plan = get_plan(engine, win_pkts, impl=impl, shape=shape,
-                    backends=("fused", "pallas"), compact=compact,
+                    backends=("fused", "pallas"), compact=opt.compact,
                     streaming=True)
     return (backend_for_plan(plan), plan.compact, plan.compact_floor, plan)
 
@@ -157,55 +176,56 @@ def run_streaming(
     engine: Engine,
     win_pkts: np.ndarray,        # (B, p, W, PKT_NFIELDS), B unbounded
     *,
-    micro_batch: int = 4096,
-    donate: bool | None = None,
-    mesh=None,
-    impl: str | None = None,
-    inflight: int = 2,
-    compact: bool | str = False,
+    options: EngineOptions | None = None,
+    micro_batch=_UNSET,
+    donate=_UNSET,
+    mesh=_UNSET,
+    impl=_UNSET,
+    inflight=_UNSET,
+    compact=_UNSET,
 ) -> EngineResult:
     """Streaming inference over a batch larger than one device batch.
 
     Equivalent to ``engine.run(win_pkts, with_trace=False)`` for any
     ``B``, ``micro_batch``, backend, mesh, and pipelining depth
     (property-tested, including the padded ragged tail); memory
-    high-water is ``inflight`` micro-batches, not ``B``.  With ``mesh``
-    the micro-batch is rounded up to a multiple of the mesh's
-    data-parallel device count and each chunk executes sharded over the
-    flow axis.  ``compact=True`` runs each chunk's walk with early-exit
-    compaction (``kernels.compaction``) — identical verdicts, less work
-    per hop once flows start exiting; ``compact="auto"`` lets the
-    routing plan decide.
+    high-water is ``inflight`` micro-batches, not ``B``.  Knobs arrive
+    as ``options=EngineOptions(...)`` (the bare keywords are deprecated
+    shims).  With ``options.mesh`` the micro-batch is rounded up to a
+    multiple of the mesh's data-parallel device count and each chunk
+    executes sharded over the flow axis.  ``compact=True`` runs each
+    chunk's walk with early-exit compaction (``kernels.compaction``) —
+    identical verdicts, less work per hop once flows start exiting;
+    ``compact="auto"`` lets the routing plan decide.
 
     ``impl="auto"`` / ``"tuned"`` resolve a ``repro.tuning.Plan`` for
     the chunk shape (backend + ``block_b`` + compaction), restricted to
     the streamable walk backends; the plan lands on the returned
-    result's ``.plan``.
+    result's ``.plan`` (a pre-resolved ``options.plan`` is used as-is).
 
     ``inflight`` chunks are dispatched before the first result is
     pulled, so host staging of chunk i+1 overlaps device compute of
     chunk i (jax dispatch is async); ``inflight=1`` restores the fully
     synchronous PR 1 behaviour.
     """
+    opt = _legacy_options(options, {
+        "micro_batch": micro_batch, "donate": donate, "mesh": mesh,
+        "impl": impl, "inflight": inflight, "compact": compact})
     P = engine._check_windows(win_pkts)
     B = win_pkts.shape[0]
-    if micro_batch <= 0:
-        raise ValueError("micro_batch must be positive")
-    if inflight <= 0:
-        raise ValueError("inflight must be positive")
-    mb = micro_batch
+    mesh, inflight = opt.mesh, opt.inflight
+    mb = opt.micro_batch
     if mesh is not None:
         mb = round_up(mb, flow_batch_devices(mesh))
-    backend, compact, floor, plan = _resolve_backend(
-        engine, impl, mesh, mb, compact, win_pkts)
+    backend, cpt, floor, plan = _resolve_backend(engine, opt, mb, win_pkts)
     if mesh is not None:
         walk = _sharded_walk(mesh, engine.ret.n_subtrees,
-                             _should_donate(donate), backend.step, compact,
+                             _should_donate(opt.donate), backend.step, cpt,
                              floor)
     else:
         walk = _single_device_walk(engine.ret.n_subtrees,
-                                   _should_donate(donate), backend.step,
-                                   compact, floor)
+                                   _should_donate(opt.donate), backend.step,
+                                   cpt, floor)
 
     # int32 throughout with the walk's -1 sentinels as the fill value:
     # per-batch results concatenate (stream_batches) without upcasts,
@@ -246,12 +266,13 @@ def stream_batches(
     engine: Engine,
     batches: Iterable[np.ndarray],
     *,
-    micro_batch: int = 4096,
-    donate: bool | None = None,
-    mesh=None,
-    impl: str | None = None,
-    inflight: int = 2,
-    compact: bool | str = False,
+    options: EngineOptions | None = None,
+    micro_batch=_UNSET,
+    donate=_UNSET,
+    mesh=_UNSET,
+    impl=_UNSET,
+    inflight=_UNSET,
+    compact=_UNSET,
 ) -> Iterator[EngineResult]:
     """Open-stream form: one :class:`EngineResult` per incoming batch.
 
@@ -259,7 +280,8 @@ def stream_batches(
     over whatever flow counts the capture pipeline emits; the compiled
     walk is shared across all of them as long as ``(p, W)`` match.
     """
+    opt = _legacy_options(options, {
+        "micro_batch": micro_batch, "donate": donate, "mesh": mesh,
+        "impl": impl, "inflight": inflight, "compact": compact})
     for batch in batches:
-        yield run_streaming(engine, batch, micro_batch=micro_batch,
-                            donate=donate, mesh=mesh, impl=impl,
-                            inflight=inflight, compact=compact)
+        yield run_streaming(engine, batch, options=opt)

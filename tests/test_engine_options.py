@@ -1,0 +1,176 @@
+"""EngineOptions: the one configuration object behind ``Engine.run``,
+``run_streaming`` and the flow-table server.  Legacy keywords keep
+working through thin shims but warn; the options path is silent and
+bit-identical to the keyword spelling it replaces."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.inference import Engine, EngineOptions
+from repro.flows.windows import window_packets
+from repro.serve.streaming import run_streaming, stream_batches
+
+
+@pytest.fixture(scope="module")
+def setup(trained_pdt):
+    pdt, _, tr = trained_pdt
+    eng = Engine.from_model(pdt)
+    wp = window_packets(tr, 3)
+    return eng, wp
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.recircs, b.recircs)
+    np.testing.assert_array_equal(a.exit_partition, b.exit_partition)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_options_validate_eagerly():
+    with pytest.raises(ValueError, match="impl"):
+        EngineOptions(impl="sideways")
+    with pytest.raises(ValueError, match="compact"):
+        EngineOptions(compact="maybe")
+    with pytest.raises(ValueError, match="compact_floor"):
+        EngineOptions(compact_floor=0)
+    with pytest.raises(ValueError, match="block_b"):
+        EngineOptions(block_b=-4)
+    with pytest.raises(ValueError, match="micro_batch"):
+        EngineOptions(micro_batch=0)
+    with pytest.raises(ValueError, match="inflight"):
+        EngineOptions(inflight=0)
+
+
+def test_options_replace_is_functional():
+    base = EngineOptions(impl="fused")
+    tuned = base.replace(impl="tuned", compact="auto")
+    assert base.impl == "fused" and base.compact is False
+    assert tuned.impl == "tuned" and tuned.compact == "auto"
+    with pytest.raises(ValueError):
+        base.replace(inflight=0)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: every legacy keyword warns, options= is silent
+# ---------------------------------------------------------------------------
+def test_engine_run_legacy_kwargs_warn(setup):
+    eng, wp = setup
+    with pytest.warns(DeprecationWarning, match="impl"):
+        legacy = eng.run(wp, with_trace=False, impl="fused")
+    with pytest.warns(DeprecationWarning, match="compact"):
+        eng.run(wp[:16], with_trace=False, compact=True)
+    new = eng.run(wp, with_trace=False,
+                  options=EngineOptions(impl="fused"))
+    _assert_same(legacy, new)
+
+
+def test_run_streaming_legacy_kwargs_warn(setup):
+    eng, wp = setup
+    with pytest.warns(DeprecationWarning, match="micro_batch"):
+        legacy = run_streaming(eng, wp, micro_batch=64)
+    new = run_streaming(eng, wp,
+                        options=EngineOptions(micro_batch=64))
+    _assert_same(legacy, new)
+    with pytest.warns(DeprecationWarning, match="inflight"):
+        run_streaming(eng, wp[:32], inflight=1)
+    with pytest.warns(DeprecationWarning, match="compact"):
+        run_streaming(eng, wp[:32], compact=True)
+
+
+def test_engine_method_shims_warn(setup):
+    eng, wp = setup
+    with pytest.warns(DeprecationWarning, match="micro_batch"):
+        legacy = eng.run_streaming(wp, micro_batch=48)
+    new = eng.run_streaming(wp, options=EngineOptions(micro_batch=48))
+    _assert_same(legacy, new)
+    with pytest.warns(DeprecationWarning, match="compact"):
+        looped = eng.run_looped(wp[:24], with_trace=False, compact=True)
+    _assert_same(looped, eng.run_looped(
+        wp[:24], with_trace=False, options=EngineOptions(compact=True)))
+
+
+def test_options_path_is_warning_free(setup):
+    eng, wp = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng.run(wp[:32], with_trace=False,
+                options=EngineOptions(impl="pallas", compact=True))
+        run_streaming(eng, wp[:32], options=EngineOptions(
+            micro_batch=16, inflight=1, compact="auto"))
+        eng.run_looped(wp[:16], with_trace=False, options=EngineOptions())
+
+
+def test_mixing_options_and_legacy_raises(setup):
+    eng, wp = setup
+    with pytest.raises(ValueError, match="not both"):
+        eng.run(wp, options=EngineOptions(), impl="fused")
+    with pytest.raises(ValueError, match="not both"):
+        run_streaming(eng, wp, options=EngineOptions(), micro_batch=8)
+
+
+# ---------------------------------------------------------------------------
+# routing equivalences
+# ---------------------------------------------------------------------------
+def test_options_impl_matches_engine_impl_attr(setup):
+    eng, wp = setup
+    a = eng.run(wp, with_trace=False,
+                options=EngineOptions(impl="pallas"))
+    b = eng.run(wp, with_trace=False,
+                options=EngineOptions(impl="fused"))
+    c = eng.run(wp, with_trace=False)   # engine default impl
+    _assert_same(a, b)
+    _assert_same(a, c)
+
+
+def test_options_plan_pins_backend(setup):
+    eng, wp = setup
+    auto = eng.run(wp, with_trace=False,
+                   options=EngineOptions(impl="auto"))
+    assert auto.plan is not None
+    pinned = eng.run(wp, with_trace=False,
+                     options=EngineOptions(plan=auto.plan))
+    assert pinned.plan is auto.plan
+    _assert_same(auto, pinned)
+
+
+def test_streaming_options_compact_auto(setup):
+    eng, wp = setup
+    full = eng.run(wp, with_trace=False)
+    res = run_streaming(eng, wp, options=EngineOptions(
+        micro_batch=40, compact="auto"))
+    _assert_same(res, full)
+    ticks = list(stream_batches(eng, [wp[:20], wp[20:52]],
+                                options=EngineOptions(micro_batch=16)))
+    _assert_same(ticks[0], eng.run(wp[:20], with_trace=False))
+    _assert_same(ticks[1], eng.run(wp[20:52], with_trace=False))
+
+
+def test_streaming_inflight_zero_rejected_via_options(setup):
+    eng, wp = setup
+    with pytest.raises(ValueError):
+        run_streaming(eng, wp, options=EngineOptions(inflight=0))
+
+
+def test_serve_namespace_exports_unified_surface():
+    import repro.serve as serve
+    for name in ("Engine", "EngineOptions", "EngineResult",
+                 "FlowTable", "FlowTableServer", "StreamVerdicts",
+                 "StreamVerdict", "run_streaming", "stream_batches"):
+        assert hasattr(serve, name), name
+    # heavy LM-serving prototypes must stay un-imported by the package
+    # surface (other tests may import them directly, so check the
+    # package source rather than sys.modules)
+    import ast
+    import inspect
+    imported = {
+        name
+        for node in ast.walk(ast.parse(inspect.getsource(serve)))
+        if isinstance(node, (ast.Import, ast.ImportFrom))
+        for name in ([a.name for a in node.names]
+                     + ([node.module] if isinstance(node, ast.ImportFrom)
+                        else []))
+    }
+    assert not any("batching" in m or "serve_step" in m for m in imported)
