@@ -5,7 +5,7 @@ have"; this answers the deployment question — sustained packets/sec
 through :class:`repro.serve.FlowTableServer` with verdicts emitted
 in-stream.  Rows are written to ``BENCH_serve.json`` (override with the
 BENCH_SERVE_JSON env var) alongside the CSV, one per
-``<profile>/<impl>`` cell:
+``<profile>/<impl>/<tick_engine>/t<tick>`` cell:
 
 * ``pkts_per_s`` — sustained ingest throughput over the whole replay
   (all ticks + flush, steady-state: jit warm-up excluded by a priming
@@ -15,15 +15,25 @@ BENCH_SERVE_JSON env var) alongside the CSV, one per
   that emitted it: the time the caller waited on the serving step for
   that answer (arrival-queueing time is a property of the replayed
   trace, not of the server, so it is excluded on purpose);
+* ``dispatches_per_tick`` — jitted device calls per ingest tick.  The
+  fused tick engine's contract is O(1) (admission + tick step); the
+  legacy engine pays per rank and per drain round.  Box timings are
+  noisy — this is the deterministic column;
+* ``speedup_vs_legacy`` — fused-tick wall-clock gain over the legacy
+  engine at the same (profile, impl, tick), on fused rows where the
+  matching legacy row ran;
 * ``max_resident_flows`` — peak concurrent flows held (table slots +
   host spill), the memory high-water mark;
 * ``spilled`` / ``evicted`` — how often the hash table overflowed to
   the host and how many flows timed out mid-stream.
 
-Both arrival profiles (``steady``, ``bursty``) run so the tail latency
-row captures burst behaviour, not just the uniform-arrival best case.
-Verdict parity is not re-checked here — ``tests/test_flowtable.py``
-holds the server bit-identical to the batch walk."""
+The fused tick engine sweeps tick sizes (64/256/1024) — bigger ticks
+amortise the fixed two dispatches over more packets, which is the whole
+perf story on dispatch-bound hosts.  Both arrival profiles (``steady``,
+``bursty``) run so the tail latency rows capture burst behaviour, not
+just the uniform-arrival best case.  Verdict parity is not re-checked
+here — ``tests/test_flowtable.py`` and ``tests/test_tick_engine.py``
+hold every cell bit-identical to the batch walk."""
 from __future__ import annotations
 
 import json
@@ -38,6 +48,7 @@ JSON_PATH_ENV = "BENCH_SERVE_JSON"
 DEFAULT_JSON_PATH = "BENCH_serve.json"
 
 P = 3
+TICK_SWEEP = (64, 256, 1024)
 
 
 def _write_json(results: list[dict], mode: str) -> str:
@@ -82,11 +93,11 @@ def run(quick: bool = True, smoke: bool = False):
     from repro.serve import FlowTableServer
 
     if smoke:
-        n_flows, tick, buckets = 96, 64, 8
+        n_flows, base_tick, buckets = 96, 64, 8
     elif quick:
-        n_flows, tick, buckets = 1200, 256, 32
+        n_flows, base_tick, buckets = 1200, 256, 32
     else:
-        n_flows, tick, buckets = 4000, 512, 64
+        n_flows, base_tick, buckets = 4000, 1024, 64
 
     pdt = splidt_model("d2", (2, 3, 2), 4, n_flows=n_flows)
     eng = Engine.from_model(pdt)
@@ -94,44 +105,72 @@ def run(quick: bool = True, smoke: bool = False):
 
     rows: list[Row] = []
     results: list[dict] = []
-    impls = ("fused",) if smoke else ("fused", "pallas")
+    impls = ("fused", "pallas")
+    # grid: fused tick engine sweeps tick sizes; the legacy engine runs
+    # at the base tick only (it is the baseline, not the product)
+    grid = [("fused", t) for t in TICK_SWEEP] + [("legacy", base_tick)]
+    if smoke:
+        grid = [("fused", base_tick), ("fused", 4 * base_tick),
+                ("legacy", base_tick)]
+    secs_at = {}    # (profile, impl, tick, tick_engine) -> seconds
     for profile in ARRIVAL_PROFILES:
         stream = make_packet_stream(tr, seed=7, profile=profile)
-        warm = stream.slice(0, min(stream.n_packets, 4 * tick))
         for impl in impls:
-            def make_server(impl=impl):
-                return FlowTableServer(
-                    eng, n_buckets=buckets, bucket_size=8,
-                    options=EngineOptions(impl=impl))
-            # prime jit caches on a prefix so the timed replay is
-            # steady-state (the capacity ladder keeps shapes shared)
-            srv = make_server()
-            srv.ingest(warm)
-            srv.flush()
+            cells = grid if impl == "fused" else [("fused", base_tick)]
+            for tick_engine, tick in cells:
+                def make_server(impl=impl, tick_engine=tick_engine):
+                    return FlowTableServer(
+                        eng, n_buckets=buckets, bucket_size=8,
+                        tick_engine=tick_engine,
+                        options=EngineOptions(impl=impl))
+                # prime jit caches with an untimed replay so the timed
+                # pass is steady-state — the capacity ladder keeps the
+                # (rank, width) shapes shared, but only a full pass
+                # visits the deep rank chains late in the stream
+                _replay(make_server, stream, tick)
 
-            secs, lat, stats = _replay(make_server, stream, tick)
-            pkts_s = stats.packets / secs if secs > 0 else float("inf")
-            p50 = float(np.percentile(lat, 50) * 1e3)
-            p99 = float(np.percentile(lat, 99) * 1e3)
-            name = f"serve/{profile}/{impl}"
-            rows.append(Row(name, secs / max(stats.verdicts, 1) * 1e6,
-                            f"pkts_per_s={pkts_s:.0f};p50_ms={p50:.2f};"
-                            f"p99_ms={p99:.2f};"
-                            f"peak_resident={stats.peak_resident}"))
-            results.append({
-                "name": name,
-                "profile": profile,
-                "impl": impl,
-                "n_flows": stats.flows_seen,
-                "n_packets": stats.packets,
-                "tick": tick,
-                "pkts_per_s": round(pkts_s, 1),
-                "verdict_p50_ms": round(p50, 3),
-                "verdict_p99_ms": round(p99, 3),
-                "max_resident_flows": stats.peak_resident,
-                "spilled": stats.spilled,
-                "evicted": stats.evicted,
-            })
+                secs, lat, stats = _replay(make_server, stream, tick)
+                secs_at[(profile, impl, tick, tick_engine)] = secs
+                pkts_s = stats.packets / secs if secs > 0 else float("inf")
+                p50 = float(np.percentile(lat, 50) * 1e3)
+                p99 = float(np.percentile(lat, 99) * 1e3)
+                dpt = stats.dispatches / max(stats.ticks, 1)
+                legacy = secs_at.get((profile, impl, tick, "legacy"))
+                speedup = (round(legacy / secs, 2)
+                           if tick_engine == "fused" and legacy and secs > 0
+                           else None)
+                name = f"serve/{profile}/{impl}/{tick_engine}/t{tick}"
+                rows.append(Row(
+                    name, secs / max(stats.verdicts, 1) * 1e6,
+                    f"pkts_per_s={pkts_s:.0f};p50_ms={p50:.2f};"
+                    f"p99_ms={p99:.2f};disp_per_tick={dpt:.2f};"
+                    f"peak_resident={stats.peak_resident}"))
+                results.append({
+                    "name": name,
+                    "profile": profile,
+                    "impl": impl,
+                    "tick_engine": tick_engine,
+                    "n_flows": stats.flows_seen,
+                    "n_packets": stats.packets,
+                    "tick": tick,
+                    "pkts_per_s": round(pkts_s, 1),
+                    "verdict_p50_ms": round(p50, 3),
+                    "verdict_p99_ms": round(p99, 3),
+                    "dispatches_per_tick": round(dpt, 3),
+                    "speedup_vs_legacy": speedup,
+                    "max_resident_flows": stats.peak_resident,
+                    "spilled": stats.spilled,
+                    "evicted": stats.evicted,
+                })
+    # the legacy baseline runs AFTER the fused sweep in each impl block;
+    # back-fill the speedup column for the fused rows it bases
+    for r in results:
+        if r["tick_engine"] != "fused" or r["speedup_vs_legacy"]:
+            continue
+        legacy = secs_at.get((r["profile"], r["impl"], r["tick"], "legacy"))
+        fused = secs_at.get((r["profile"], r["impl"], r["tick"], "fused"))
+        if legacy and fused:
+            r["speedup_vs_legacy"] = round(legacy / fused, 2)
 
     path = _write_json(results, "smoke" if smoke else
                        ("quick" if quick else "full"))

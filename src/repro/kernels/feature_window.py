@@ -229,6 +229,93 @@ def feature_update_pallas(
     return acc2[:B], seen2[:B]
 
 
+def _update_finalize_kernel(pkt_ref, op_ref, field_ref, pred_ref,
+                            init_ref, acc_ref, seen_ref,
+                            acc_out, seen_out, regs_out):
+    """Fused fold + finalize: one VMEM pass per packet-rank.
+
+    The tick engine (``kernels.tick_step``) hops a slot in the same
+    dispatch that folded its window-completing packet, so the kernel
+    emits the finalized registers alongside the new ``(acc, seen)`` —
+    op-by-op identical to ``feature_update_ref`` followed by
+    ``feature_finalize_ref``, so the fused path stays bit-identical to
+    the two-step fold."""
+    pkt = pkt_ref[...]                                     # (Bb, F)
+    op = op_ref[...]                                       # (Bb, k)
+    field = field_ref[...]
+    pred = pred_ref[...]
+    init = init_ref[...]
+    acc = acc_ref[...]
+    seen = seen_ref[...]
+    k = op.shape[1]
+
+    mask, val = _packet_mask_val(pkt, pred, field, k)
+    mf = mask.astype(jnp.float32)
+    additive = ((op == F.OP_COUNT) | (op == F.OP_SUM) | (op == F.OP_SUMSQ))
+    contrib = jnp.where(op == F.OP_COUNT, mf,
+                        jnp.where(op == F.OP_SUM, val * mf, val * val * mf))
+    out = jnp.where(additive, acc + contrib, acc)
+    out = jnp.where((op == F.OP_MAX) & mask, jnp.maximum(acc, val), out)
+    out = jnp.where((op == F.OP_MIN) & mask, jnp.minimum(acc, val), out)
+    out = jnp.where((op == F.OP_FIRST) & mask & (seen == 0), val, out)
+    out = jnp.where((op == F.OP_LAST) & mask, val, out)
+    out = out.astype(jnp.float32)
+    seen2 = seen | mask.astype(jnp.int32)
+    # finalize: the empty-window fallbacks of feature_finalize_ref
+    empty = seen2 == 0
+    regs = jnp.where((op == F.OP_MAX) & empty, 0.0, out)
+    regs = jnp.where((op == F.OP_MIN) & empty, init, regs)
+    regs = jnp.where(((op == F.OP_FIRST) | (op == F.OP_LAST)) & empty,
+                     0.0, regs)
+    acc_out[...] = out
+    seen_out[...] = seen2
+    regs_out[...] = regs.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def feature_update_finalize_pallas(
+    pkt: jnp.ndarray,         # (B, PKT_NFIELDS) f32, ONE packet per row
+    slot_op: jnp.ndarray,     # (B, k) int32 (pre-gathered by SID)
+    slot_field: jnp.ndarray,  # (B, k)
+    slot_pred: jnp.ndarray,   # (B, k)
+    slot_init: jnp.ndarray,   # (B, k) f32 (MIN's empty-window fallback)
+    acc: jnp.ndarray,         # (B, k) f32 running window state
+    seen: jnp.ndarray,        # (B, k) int32
+    *,
+    interpret: bool = True,
+    block_b: int = BLOCK_B,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fold one packet per row AND finalize: ``(acc2, seen2, regs)``.
+
+    ``regs`` equals ``feature_finalize_ref(acc2, seen2, ...)`` bit for
+    bit; rows whose window did not complete simply ignore it.  Padding
+    rows pass state through untouched up to signed zero, as in
+    :func:`feature_update_pallas`."""
+    B, nf = pkt.shape
+    k = slot_op.shape[1]
+    bb = min(block_b, B)
+    Bp = round_up(B, bb)
+    if Bp != B:
+        pkt, slot_op, slot_field, slot_pred, slot_init, acc, seen = (
+            pad_axis0(x, Bp)
+            for x in (pkt, slot_op, slot_field, slot_pred, slot_init,
+                      acc, seen))
+    grid = (Bp // bb,)
+    row = pl.BlockSpec((bb, k), lambda i: (i, 0))
+    acc2, seen2, regs = pl.pallas_call(
+        _update_finalize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, nf), lambda i: (i, 0)),
+                  row, row, row, row, row, row],
+        out_specs=[row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, k), jnp.float32)],
+        interpret=interpret,
+    )(pkt, slot_op, slot_field, slot_pred, slot_init, acc, seen)
+    return acc2[:B], seen2[:B], regs[:B]
+
+
 def feature_update_at(
     acc_tab: jnp.ndarray,     # (N, k) f32 resident state table
     seen_tab: jnp.ndarray,    # (N, k) int32

@@ -189,6 +189,20 @@ def feature_finalize_ref(
     return out.astype(jnp.float32)
 
 
+def feature_update_finalize_ref(pkt, slot_op, slot_field, slot_pred,
+                                slot_init, acc, seen):
+    """Fold one packet per row AND finalize: ``(acc2, seen2, regs)``.
+
+    The composed oracle for the fused tick-step kernel
+    (``kernels.feature_window.feature_update_finalize_pallas``): exactly
+    :func:`feature_update_ref` followed by :func:`feature_finalize_ref`
+    on the updated state.
+    """
+    acc2, seen2 = feature_update_ref(pkt, slot_op, slot_field, slot_pred,
+                                     acc, seen)
+    return acc2, seen2, feature_finalize_ref(acc2, seen2, slot_op, slot_init)
+
+
 # ---------------------------------------------------------------------------
 # dt_traverse: range-mark matching (grouped by SID outside the kernel)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,287 @@
+"""Device-resident tick engine: one dispatch per serving tick.
+
+The live flow table (``repro.serve.flowtable``) used to pay one jitted
+dispatch per packet *rank* (the r-th packet of each flow in a tick) plus
+one per hop-drain round, with host round trips in between — on a CPU
+host the ~0.5 ms dispatch overhead dominated end-to-end serving latency
+(see ``tuning.costmodel.DEFAULT_COEFFS``).  This module folds the whole
+per-tick pipeline into ONE jitted call:
+
+  * **state** (:class:`TickState`) is a device-resident pytree holding
+    the per-slot window registers AND the per-flow walk metadata that
+    used to live in host numpy arrays (``sid``, ``part``, ``win_lo`` /
+    ``win_hi``, ``pkts_seen``, ``recircs``) plus a ``retired`` flag and
+    the per-flow window ``bounds`` table.  Row ``N`` (one past the table
+    capacity) is the dummy row every padded or masked scatter lands on;
+  * **admission** (:func:`admit_rows`) re-initialises newly admitted
+    slots in one scatter, computing ``flows.windows.window_bounds`` with
+    in-jit int32 math (bit-for-bit the host formula);
+  * **the tick step** (:func:`tick_step`) runs the rank loop as a
+    ``lax.scan`` over the tick's rank-major ``(R, C)`` slot/packet
+    arrays.  Each rank folds one packet per slot (the incremental
+    update of ``kernels.ref.feature_update_ref`` or the fused Pallas
+    fold+finalize kernel), then hops every slot whose window completed:
+    finalize → subtree traverse → the walk's own
+    ``core.inference._hop_update`` bookkeeping.  Empty trailing windows
+    (flows shorter than P packets) drain inside an in-jit bounded
+    ``lax.while_loop`` — the partition index strictly advances every
+    round, so ``P`` is a static trip bound;
+  * **verdicts** accumulate into per-slot device buffers; the server
+    issues one bulk ``device_get`` per tick and frees the finished
+    slots host-side.
+
+Parity (docs/PARITY.md §5): every per-row computation here is the same
+row-wise kernel math the legacy per-rank path dispatched — gathers and
+masks route rows, they never change values — so fused-tick verdicts are
+bit-identical to the host-looped path and to ``Engine.run`` on rebuilt
+windows.  Masked rows (padding, retired flows, already-hopped slots)
+are routed to the dummy row with invalidated packets; every dummy
+duplicate computes identical values, so the scatters stay
+deterministic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import PKT_IAT
+from repro.core.inference import _hop_update
+from repro.kernels import ops
+from repro.kernels import ref as _ref
+from repro.kernels.dispatch import dispatch_dt_traverse
+from repro.kernels.feature_window import feature_update_finalize_pallas
+
+
+class TickState(NamedTuple):
+    """Device-resident per-slot serving state (``N + 1`` rows).
+
+    The last row is the dummy row: padded rank entries, retired flows,
+    and non-hopping slots are all routed there so every device op keeps
+    a static shape.  ``bounds`` caches each flow's per-partition window
+    ``[lo, hi)`` so hops never need the host.
+    """
+    acc: jnp.ndarray        # (N+1, k) f32 running window registers
+    seen: jnp.ndarray       # (N+1, k) int32 "matched yet" bits
+    sid: jnp.ndarray        # (N+1,) int32 active subtree id
+    part: jnp.ndarray       # (N+1,) int32 active partition index
+    win_lo: jnp.ndarray     # (N+1,) int32 active window start (packets)
+    win_hi: jnp.ndarray     # (N+1,) int32 active window end
+    pkts_seen: jnp.ndarray  # (N+1,) int32 packets folded so far
+    recircs: jnp.ndarray    # (N+1,) int32 partition transitions
+    retired: jnp.ndarray    # (N+1,) int32 1 = verdict emitted this epoch
+    bounds: jnp.ndarray     # (N+1, P, 2) int32 per-partition windows
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_partitions"))
+def init_tick_state(dev: ops.DeviceTables, n: int,
+                    n_partitions: int) -> TickState:
+    """Blank state for ``n`` rows (capacity + dummy), root SID 0."""
+    op = jnp.broadcast_to(dev.slot_op[0][None, :], (n, dev.slot_op.shape[1]))
+    acc, seen = _ref.feature_state_init(op)
+    z = jnp.zeros(n, jnp.int32)
+    return TickState(acc, seen, z, z, z, z, z, z, z,
+                     jnp.zeros((n, n_partitions, 2), jnp.int32))
+
+
+@jax.jit
+def admit_rows(state: TickState, slots: jnp.ndarray,
+               lengths: jnp.ndarray, dev: ops.DeviceTables) -> TickState:
+    """Re-initialise newly admitted slots in one scatter.
+
+    ``slots`` (m,) int32 row indices (dummy-padded; real entries are
+    unique), ``lengths`` (m,) int32 flow lengths (padding rows carry 1,
+    so every dummy duplicate computes identical values).  The window
+    bounds replicate ``flows.windows.window_bounds`` in int32 — same
+    floor-div/min formula, so the device plan is bit-identical to the
+    host's.
+    """
+    P = state.bounds.shape[1]
+    length = jnp.maximum(lengths.astype(jnp.int32), 1)
+    base = jnp.maximum(length // P, 1)
+    w = jnp.arange(P, dtype=jnp.int32)[None, :]
+    lo = jnp.minimum(w * base[:, None], length[:, None])
+    hi = jnp.minimum((w + 1) * base[:, None], length[:, None])
+    hi = hi.at[:, P - 1].set(length)
+    k = dev.slot_op.shape[1]
+    a0, s0 = _ref.feature_state_init(
+        jnp.broadcast_to(dev.slot_op[0][None, :], (slots.shape[0], k)))
+    z = jnp.zeros(slots.shape[0], jnp.int32)
+    return TickState(
+        acc=state.acc.at[slots].set(a0),
+        seen=state.seen.at[slots].set(s0),
+        sid=state.sid.at[slots].set(z),
+        part=state.part.at[slots].set(z),
+        win_lo=state.win_lo.at[slots].set(lo[:, 0]),
+        win_hi=state.win_hi.at[slots].set(hi[:, 0]),
+        pkts_seen=state.pkts_seen.at[slots].set(z),
+        recircs=state.recircs.at[slots].set(z),
+        retired=state.retired.at[slots].set(z),
+        bounds=state.bounds.at[slots].set(jnp.stack([lo, hi], axis=-1)),
+    )
+
+
+def _traverse(regs, sid_rows, dev, *, pallas: bool, block_b: int):
+    """Subtree traversal for one hop round (dense gather or Pallas)."""
+    if pallas:
+        return dispatch_dt_traverse(
+            regs, sid_rows, dev.thresholds, dev.leaf_lo, dev.leaf_hi,
+            dev.leaf_action, dev.leaf_valid,
+            interpret=not ops._on_tpu(), block_b=block_b)
+    return _ref.dt_traverse_ref(
+        regs, dev.thresholds[sid_rows], dev.leaf_lo[sid_rows],
+        dev.leaf_hi[sid_rows], dev.leaf_action[sid_rows],
+        dev.leaf_valid[sid_rows] > 0)
+
+
+def _hop_round(st: TickState, vm, vl, vr, ve, h, regs, complete, dev, *,
+               n_subtrees: int, pallas: bool, block_b: int):
+    """One hop for the slots in ``h`` whose ``complete`` bit is set.
+
+    ``h`` (C,) routes non-completing rows to the dummy row; ``regs``
+    (C, k) are the finalized registers for the completing rows (masked
+    rows may carry anything — traversal output for them is discarded by
+    the ``complete`` masks).  Runs traverse + ``_hop_update``, scatters
+    verdicts for exiting / fell-off-the-last-partition flows into the
+    per-slot buffers, advances the survivors' partition/window/SID, and
+    returns the ``complete`` mask for the next drain round (flows whose
+    new window is empty).
+    """
+    P = st.bounds.shape[1]
+    dummy = st.sid.shape[0] - 1
+    sid_rows = st.sid[h]
+    p_rows = st.part[h]
+    rec_rows = st.recircs[h]
+    action = _traverse(regs, sid_rows, dev, pallas=pallas, block_b=block_b)
+    carry = (sid_rows, ~complete,
+             jnp.full(sid_rows.shape, -1, jnp.int32), rec_rows,
+             jnp.full(sid_rows.shape, -1, jnp.int32))
+    sid2, done2, labels, rec2, exit_p = _hop_update(
+        carry, p_rows, action, n_subtrees)
+    exited = complete & done2
+    fell = complete & ~done2 & (p_rows == P - 1)
+    adv = complete & ~done2 & (p_rows < P - 1)
+    newdone = exited | fell
+
+    # verdict buffers: one row per slot; a slot can finish at most once
+    # per tick (admission precedes folding, so no within-tick reuse)
+    vslot = jnp.where(newdone, h, dummy)
+    vm = vm.at[vslot].set(1)
+    vl = vl.at[vslot].set(labels)        # -1 unless the flow exited
+    vr = vr.at[vslot].set(rec2)
+    ve = ve.at[vslot].set(exit_p)        # -1 unless the flow exited
+    retired = st.retired.at[vslot].set(1)
+
+    # survivors advance to the next partition's window; finished rows
+    # keep their metadata (the host frees their slots after the fetch)
+    new_part = jnp.where(adv, p_rows + 1, p_rows)
+    nb = st.bounds[h, jnp.minimum(new_part, P - 1)]          # (C, 2)
+    new_lo = jnp.where(adv, nb[:, 0], st.win_lo[h])
+    new_hi = jnp.where(adv, nb[:, 1], st.win_hi[h])
+    a0, s0 = _ref.feature_state_init(dev.slot_op[sid2])
+    st = TickState(
+        acc=st.acc.at[h].set(a0),
+        seen=st.seen.at[h].set(s0),
+        sid=st.sid.at[h].set(sid2),
+        part=st.part.at[h].set(new_part),
+        win_lo=st.win_lo.at[h].set(new_lo),
+        win_hi=st.win_hi.at[h].set(new_hi),
+        pkts_seen=st.pkts_seen,
+        recircs=st.recircs.at[h].set(rec2),
+        retired=retired,
+        bounds=st.bounds,
+    )
+    return st, vm, vl, vr, ve, adv & (new_lo == new_hi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_subtrees", "pallas", "block_b"))
+def tick_step(state: TickState, slots_rc: jnp.ndarray,
+              pkt_rc: jnp.ndarray, dev: ops.DeviceTables, *,
+              n_subtrees: int, pallas: bool, block_b: int):
+    """One ingest tick: fold every rank, hop every completed window.
+
+    ``slots_rc`` (R, C) int32 rank-major slot indices (dummy-padded;
+    within a rank each real slot appears at most once) and ``pkt_rc``
+    (R, C, F) the matching packets.  Rank order is per-flow arrival
+    order — the reduction order the parity contract pins.  Returns the
+    new state plus ``(verdict_mask, labels, recircs, exit_partition,
+    recircs_snapshot)``, each ``(N,)``, for ONE bulk ``device_get``:
+    rows with ``verdict_mask == 1`` finished this tick (exit or
+    fell-off sentinels), ``recircs_snapshot`` mirrors the live
+    recirculation counts for host-side flush/timeout sentinels.
+    """
+    N1 = state.sid.shape[0]
+    P = state.bounds.shape[1]
+    dummy = N1 - 1
+    v0 = (jnp.zeros(N1, jnp.int32), jnp.full(N1, -1, jnp.int32),
+          jnp.zeros(N1, jnp.int32), jnp.full(N1, -1, jnp.int32))
+
+    def rank_body(carry, xs):
+        st, vm, vl, vr, ve = carry
+        slots, pkt = xs
+        # a flow that finished earlier this tick must not fold its late
+        # packets (malformed flow_len) into the slot's state: the
+        # retired bit is the device form of the host's key check
+        live = (slots != dummy) & (st.retired[slots] == 0)
+        s = jnp.where(live, slots, dummy)
+        pkt = jnp.where(live[:, None], pkt, 0.0)
+        # window boundary clears the dependency chain (first-packet
+        # IAT = 0), matching flows.windows.window_packets
+        first = st.pkts_seen[s] == st.win_lo[s]
+        pkt = pkt.at[:, PKT_IAT].set(jnp.where(first, 0.0, pkt[:, PKT_IAT]))
+        sid_rows = st.sid[s]
+        op = dev.slot_op[sid_rows]
+        fld = dev.slot_field[sid_rows]
+        prd = dev.slot_pred[sid_rows]
+        init = dev.slot_init[sid_rows]
+        if pallas:
+            acc2, seen2, regs = feature_update_finalize_pallas(
+                pkt, op, fld, prd, init, st.acc[s], st.seen[s],
+                interpret=not ops._on_tpu(), block_b=block_b)
+        else:
+            acc2, seen2 = _ref.feature_update_ref(
+                pkt, op, fld, prd, st.acc[s], st.seen[s])
+            regs = _ref.feature_finalize_ref(acc2, seen2, op, init)
+        pkts_seen = st.pkts_seen.at[s].add(live.astype(jnp.int32))
+        st = st._replace(acc=st.acc.at[s].set(acc2),
+                         seen=st.seen.at[s].set(seen2),
+                         pkts_seen=pkts_seen)
+        complete = live & (pkts_seen[s] == st.win_hi[s])
+
+        # the window-completing hop rides the SAME dispatch as the fold
+        # (regs already finalized above); drain rounds only ever see
+        # empty windows, whose registers finalize from blank state
+        h = jnp.where(complete, s, dummy)
+        st, vm, vl, vr, ve, nxt = _hop_round(
+            st, vm, vl, vr, ve, h, regs, complete, dev,
+            n_subtrees=n_subtrees, pallas=pallas, block_b=block_b)
+
+        def drain_cond(c):
+            return jnp.any(c[5]) & (c[6] < P)
+
+        def drain_body(c):
+            st, vm, vl, vr, ve, comp, trip = c
+            hh = jnp.where(comp, s, dummy)
+            sid_h = st.sid[hh]
+            regs = _ref.feature_finalize_ref(
+                st.acc[hh], st.seen[hh], dev.slot_op[sid_h],
+                dev.slot_init[sid_h])
+            st, vm, vl, vr, ve, comp = _hop_round(
+                st, vm, vl, vr, ve, hh, regs, comp, dev,
+                n_subtrees=n_subtrees, pallas=pallas, block_b=block_b)
+            return st, vm, vl, vr, ve, comp, trip + 1
+
+        # bounded: each round advances every completing flow's
+        # partition, so at most P-1 iterations run (trip is a backstop)
+        st, vm, vl, vr, ve, _, _ = jax.lax.while_loop(
+            drain_cond, drain_body,
+            (st, vm, vl, vr, ve, nxt, jnp.int32(0)))
+        return (st, vm, vl, vr, ve), None
+
+    (state, vm, vl, vr, ve), _ = jax.lax.scan(
+        rank_body, (state,) + v0, (slots_rc, pkt_rc))
+    N = N1 - 1
+    return state, (vm[:N], vl[:N], vr[:N], ve[:N], state.recircs[:N])

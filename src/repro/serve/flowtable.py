@@ -12,16 +12,25 @@ users, heavy traffic" direction:
     with linear bucket probing — the register-pool analogue of
     ``kernels.dispatch``'s capacity blocks: a static capacity bound
     with data-dependent routing).  When every probe fails the flow
-    falls back to a host-side spill store instead of being dropped;
-  * **incremental window state** lives on device: per-slot ``(acc,
-    seen)`` registers folded one packet at a time by the update-step
-    kernel (``kernels.feature_window.feature_update_pallas`` /
-    ``kernels.ref.feature_update_ref``) — no window rebuild per packet,
-    bit-identical to the rebuilt window per docs/PARITY.md;
-  * when a flow's window completes, the tick's completed flows hop as
-    ONE batch: finalize registers → subtree traversal → the SAME
-    ``core.inference._hop_update`` bookkeeping the partition walk uses
-    (exit / recirculate / ``-1`` sentinels);
+    falls back to a host-side spill store instead of being dropped.
+    Admission is vectorized: one NumPy group-by over the tick's flow
+    ids, one ``lookup_batch``/``insert_batch`` over the tick's unique
+    flows — no per-packet python loop;
+  * the **fused tick engine** (``kernels.tick_step``, the default via
+    ``tick_engine="auto"``) holds ALL per-flow serving state on device
+    — window registers and the walk metadata (``sid``, partition,
+    window bounds, packets seen, recircs, retired bit) — and processes
+    one whole tick in ONE jitted dispatch: a ``lax.scan`` over packet
+    ranks, each rank a fused fold→finalize→traverse (window-complete
+    slots hop through ``core.inference._hop_update`` in the same
+    dispatch that folded them), with empty trailing windows drained by
+    an in-jit bounded ``while_loop``.  Verdicts come back in one bulk
+    ``device_get`` per tick;
+  * the **legacy tick engine** (``tick_engine="legacy"``) keeps the
+    PR-6 shape — one fold dispatch per rank, one hop dispatch + host
+    sync per drain round — as the measured baseline
+    (``tuning.estimate_tick_us`` models both; ``BENCH_serve.json``
+    records the speedup).  Both engines are bit-identical;
   * **timeout eviction** emits mid-stream verdicts for idle flows with
     the ``-1`` sentinel convention (labels / exit_partition), keeping
     the accumulated recirculation count.
@@ -34,15 +43,20 @@ device scatter addresses each slot at most once and per-flow arrival
 order — the reduction order the parity contract pins — is preserved.
 Rank batches are padded to a power-of-two capacity ladder (a dummy
 table row absorbs the padding) so jit compiles a handful of shapes,
-not one per tick.
+not one per tick.  ``ServerStats.dispatches`` counts jitted device
+calls: the fused tick engine issues at most 2 per tick (admission
+scatter + tick step) regardless of rank count or drain rounds — the
+deterministic perf bar ``tests/test_tick_engine.py`` pins.
 
 Execution knobs come from :class:`repro.core.inference.EngineOptions`:
 ``impl`` picks the fold/traverse kernels (``fused`` = dense jnp,
 ``pallas`` = the Pallas scatter-update + SID-dispatched traverse;
 ``auto``/``tuned`` resolve a ``repro.tuning.Plan`` for the table
-shape), ``block_b`` the Pallas block size.  All routes are
-bit-identical to ``Engine.run`` on the offline windows — the flow
-table can only change *when* a verdict is computed, never its value.
+shape), ``block_b`` the Pallas block size; ``tick_engine="auto"`` then
+routes fused-tick vs legacy through the tick-shape cost estimate
+(``repro.tuning.choose_tick_engine``).  All routes are bit-identical
+to ``Engine.run`` on the offline windows — the flow table can only
+change *when* a verdict is computed, never its value.
 """
 from __future__ import annotations
 
@@ -58,9 +72,14 @@ from repro.core.inference import Engine, EngineOptions, _hop_update
 from repro.flows.windows import window_bounds
 from repro.kernels import ops
 from repro.kernels import ref as _ref
+from repro.kernels import tick_step as _tick
 from repro.kernels.dispatch import dispatch_dt_traverse
 from repro.kernels.dt_traverse import BLOCK_B
 from repro.kernels.feature_window import feature_update_at
+
+#: Tick-engine modes ``FlowTableServer`` accepts ("auto" resolves via
+#: the tick-shape cost estimate in ``repro.tuning``).
+TICK_ENGINES = ("auto", "fused", "legacy")
 
 
 # ---------------------------------------------------------------------------
@@ -116,26 +135,45 @@ StreamVerdict = StreamVerdicts
 
 
 class _VerdictAccum:
-    """Append-only verdict builder (python lists -> int arrays once)."""
+    """Batched verdict builder: array chunks in, one pre-sized copy out.
+
+    Callers append whole arrays per event batch (tick completions,
+    evictions, spill runs) rather than per flow; ``build`` allocates the
+    final arrays once from the accumulated count.
+    """
 
     def __init__(self):
-        self.flow_id: list[int] = []
-        self.labels: list[int] = []
-        self.recircs: list[int] = []
-        self.exit_p: list[int] = []
+        self._chunks: list[tuple] = []
+        self.n = 0
 
     def add(self, fid, label, rec, exitp) -> None:
-        self.flow_id.append(int(fid))
-        self.labels.append(int(label))
-        self.recircs.append(int(rec))
-        self.exit_p.append(int(exitp))
+        self.add_batch(np.asarray([fid], np.int64),
+                       np.asarray([label], np.int32),
+                       np.asarray([rec], np.int32),
+                       np.asarray([exitp], np.int32))
+
+    def add_batch(self, fids, labels, recs, exitps) -> None:
+        fids = np.asarray(fids, np.int64)
+        if not fids.size:
+            return
+        self._chunks.append((fids, np.asarray(labels, np.int32),
+                             np.asarray(recs, np.int32),
+                             np.asarray(exitps, np.int32)))
+        self.n += int(fids.size)
 
     def build(self, plan) -> StreamVerdicts:
-        return StreamVerdicts(
-            np.asarray(self.flow_id, np.int64),
-            np.asarray(self.labels, np.int32),
-            np.asarray(self.recircs, np.int32),
-            np.asarray(self.exit_p, np.int32), plan=plan)
+        fid = np.empty(self.n, np.int64)
+        lab = np.empty(self.n, np.int32)
+        rec = np.empty(self.n, np.int32)
+        exp = np.empty(self.n, np.int32)
+        at = 0
+        for f, l, r, e in self._chunks:
+            fid[at:at + f.size] = f
+            lab[at:at + f.size] = l
+            rec[at:at + f.size] = r
+            exp[at:at + f.size] = e
+            at += f.size
+        return StreamVerdicts(fid, lab, rec, exp, plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +197,11 @@ class FlowTable:
     subsequent buckets (wrapping) on overflow — the data-plane analogue
     is a multi-way register hash table.  ``insert`` returns ``None``
     only when the WHOLE table is full; the server then spills to the
-    host instead of dropping the flow.
+    host instead of dropping the flow.  The batch forms
+    (:meth:`lookup_batch` / :meth:`insert_batch`) serve one tick's
+    UNIQUE flows in a single call — home buckets are hashed vectorized;
+    probing stays sequential because each insert's placement depends on
+    the previous one's occupancy.
     """
 
     def __init__(self, n_buckets: int, bucket_size: int):
@@ -179,8 +221,14 @@ class FlowTable:
     def lookup(self, key: int) -> int | None:
         return self._slot_of.get(key)
 
-    def insert(self, key: int) -> int | None:
-        b0 = int(_mix64(np.int64(key)) % np.uint64(self.n_buckets))
+    def lookup_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Slot per key, ``-1`` where absent (one probe per key)."""
+        keys = np.asarray(keys, np.int64)
+        get = self._slot_of.get
+        return np.fromiter((get(int(k), -1) for k in keys), np.int64,
+                           count=keys.size)
+
+    def _insert_at(self, key: int, b0: int) -> int:
         for probe in range(self.n_buckets):
             b = (b0 + probe) % self.n_buckets
             base = b * self.bucket_size
@@ -193,7 +241,21 @@ class FlowTable:
                 self.key[slot] = key
                 self._slot_of[key] = slot
                 return slot
-        return None
+        return -1
+
+    def insert(self, key: int) -> int | None:
+        b0 = int(_mix64(np.int64(key)) % np.uint64(self.n_buckets))
+        slot = self._insert_at(int(key), b0)
+        return None if slot < 0 else slot
+
+    def insert_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Insert keys in order; slot per key, ``-1`` where full."""
+        keys = np.asarray(keys, np.int64)
+        homes = _mix64(keys) % np.uint64(self.n_buckets)
+        out = np.empty(keys.size, np.int64)
+        for i in range(keys.size):
+            out[i] = self._insert_at(int(keys[i]), int(homes[i]))
+        return out
 
     def free(self, slot: int) -> None:
         key = int(self.key[slot])
@@ -224,6 +286,8 @@ class ServerStats:
     spilled: int = 0             # flows that fell back to the host store
     evicted: int = 0             # timeout evictions (mid-stream sentinels)
     peak_resident: int = 0       # max concurrent flows (slots + spill)
+    ticks: int = 0               # ingest calls served
+    dispatches: int = 0          # jitted device calls issued (not syncs)
 
 
 # ---------------------------------------------------------------------------
@@ -357,6 +421,13 @@ class FlowTableServer:
     than ``timeout`` seconds of stream time are evicted at tick
     boundaries the same way.
 
+    ``tick_engine`` picks the per-tick execution strategy: ``"fused"``
+    runs one jitted tick step for the whole rank loop + hop drain
+    (``kernels.tick_step``), ``"legacy"`` dispatches per rank / per
+    drain round, ``"auto"`` (default) routes through the tick-shape
+    cost estimate — fused everywhere dispatch overhead dominates.
+    Both are bit-identical; only dispatch counts and latency differ.
+
     Each flow key is served exactly once: after its verdict (exit,
     flush, or timeout) the key is retired and late packets for it are
     dropped.  The retired set grows with the number of completed flows;
@@ -367,7 +438,7 @@ class FlowTableServer:
     def __init__(self, engine: Engine, *, n_buckets: int = 64,
                  bucket_size: int = 8, timeout: float | None = None,
                  options: EngineOptions | None = None,
-                 rank_floor: int = 64):
+                 rank_floor: int = 64, tick_engine: str = "auto"):
         self.engine = engine
         self.options = options or EngineOptions()
         self.timeout = timeout
@@ -377,6 +448,17 @@ class FlowTableServer:
         self._rank_floor = int(rank_floor)
         self._pallas, self._block_b, self._plan = _resolve_exec(
             engine, self.options, self.table.capacity)
+        if tick_engine not in TICK_ENGINES:
+            raise ValueError(f"unknown tick_engine {tick_engine!r}; "
+                             f"options {TICK_ENGINES}")
+        if tick_engine == "auto":
+            from repro.tuning import ShapeInfo, choose_tick_engine
+            shape = ShapeInfo.from_engine(engine, None,
+                                          B=self.table.capacity, W=1)
+            tick_engine = choose_tick_engine(
+                shape, backend="pallas" if self._pallas else "fused",
+                block_b=self._block_b)
+        self.tick_engine = tick_engine
         # spilled flows run the batch walk; pin the same backend family
         self._spill_options = EngineOptions(
             impl="pallas" if self._pallas else "fused",
@@ -384,18 +466,24 @@ class FlowTableServer:
 
         N = self.table.capacity
         self._dummy = N                       # padding scatters land here
-        self._acc, self._seen = _blank_state(engine.dev, N + 1)
-        self._sid = np.zeros(N, np.int32)
-        self._part = np.zeros(N, np.int32)
-        self._win_lo = np.zeros(N, np.int32)
-        self._win_hi = np.zeros(N, np.int32)
-        self._pkts_seen = np.zeros(N, np.int32)
-        self._recircs = np.zeros(N, np.int32)
+        self.stats = ServerStats()
         self._last_ts = np.full(N, -np.inf, np.float64)
-        self._bounds = np.zeros((N, self.P, 2), np.int32)
+        self._recircs = np.zeros(N, np.int32)
         self._spill: dict[int, _SpillFlow] = {}
         self._retired: set[int] = set()
-        self.stats = ServerStats()
+        if self.tick_engine == "fused":
+            # everything else lives on device (kernels.tick_step);
+            # _recircs is the host mirror refreshed by each tick's bulk
+            # verdict fetch (flush/timeout sentinels read it)
+            self._tstate = _tick.init_tick_state(engine.dev, N + 1, self.P)
+        else:
+            self._acc, self._seen = _blank_state(engine.dev, N + 1)
+            self._sid = np.zeros(N, np.int32)
+            self._part = np.zeros(N, np.int32)
+            self._win_lo = np.zeros(N, np.int32)
+            self._win_hi = np.zeros(N, np.int32)
+            self._pkts_seen = np.zeros(N, np.int32)
+            self._bounds = np.zeros((N, self.P, 2), np.int32)
 
     # -- admission ------------------------------------------------------
     @property
@@ -403,21 +491,81 @@ class FlowTableServer:
         """Concurrent flows currently held (slots + host spill)."""
         return self.table.resident + len(self._spill)
 
-    def _admit(self, slot: int, length: int) -> None:
-        length = max(int(length), 1)
-        b = np.asarray(window_bounds(length, self.P), np.int32)
-        self._bounds[slot] = b
-        self._sid[slot] = 0
-        self._part[slot] = 0
-        self._win_lo[slot], self._win_hi[slot] = b[0]
-        self._pkts_seen[slot] = 0
-        self._recircs[slot] = 0
-        self._last_ts[slot] = -np.inf
-        self.stats.flows_seen += 1
-
     def _evict(self, slot: int) -> None:
         self._retired.add(int(self.table.key[slot]))
         self.table.free(slot)
+
+    def _route_tick(self, fid: np.ndarray, flen: np.ndarray) -> np.ndarray:
+        """Vectorized admission: one group-by over the tick's flow ids.
+
+        Returns a per-packet routing code: a slot index (``>= 0``),
+        ``-2`` for the host spill store, ``-1`` for retired-flow drops.
+        Unique flows are looked up / inserted in one batch call each;
+        new flows insert in first-packet order — the exact occupancy
+        evolution of the old per-packet loop, since within a tick every
+        lookup of an already-inserted flow hits and order cannot matter
+        for hits.  Admitted slots are re-initialised in one batch
+        (``_admit_batch``); ``flows_seen`` counts once from the masks.
+        """
+        uniq, first_idx, inv = np.unique(fid, return_index=True,
+                                         return_inverse=True)
+        code = self.table.lookup_batch(uniq)
+        miss = np.nonzero(code < 0)[0]
+        if miss.size:
+            keys = uniq[miss]
+            retired = np.fromiter((int(k) in self._retired for k in keys),
+                                  np.bool_, count=keys.size)
+            spilled = np.fromiter((int(k) in self._spill for k in keys),
+                                  np.bool_, count=keys.size)
+            code[miss[retired]] = -1
+            code[miss[spilled]] = -2
+            new = miss[~retired & ~spilled]
+            if new.size:
+                new = new[np.argsort(first_idx[new], kind="stable")]
+                lens = flen[first_idx[new]]
+                slots = self.table.insert_batch(uniq[new])
+                ok = slots >= 0
+                code[new] = np.where(ok, slots, -2)
+                for j in np.nonzero(~ok)[0]:   # table full: host spill
+                    self._spill[int(uniq[new[j]])] = _SpillFlow(
+                        length=max(int(lens[j]), 1))
+                self.stats.spilled += int(np.count_nonzero(~ok))
+                self.stats.flows_seen += int(new.size)
+                if ok.any():
+                    self._admit_batch(slots[ok], lens[ok])
+        return code[inv]
+
+    def _admit_batch(self, slots: np.ndarray, lengths: np.ndarray) -> None:
+        """Initialise newly admitted slots (recycled slots carry the
+        previous tenant's state/SID) — one device call per tick."""
+        slots = np.asarray(slots, np.int64)
+        lengths = np.maximum(np.asarray(lengths, np.int64), 1)
+        self._last_ts[slots] = -np.inf
+        if self.tick_engine == "fused":
+            cap, padded = self._pad_slots(slots)
+            plen = np.ones(cap, np.int32)
+            plen[:slots.size] = lengths
+            self._tstate = _tick.admit_rows(
+                self._tstate, jnp.asarray(padded), jnp.asarray(plen),
+                self.engine.dev)
+            self.stats.dispatches += 1
+            return
+        # legacy: host metadata writes (vectorized) + one device reset
+        P = self.P
+        length = lengths.astype(np.int32)
+        base = np.maximum(length // P, 1)
+        w = np.arange(P, dtype=np.int32)[None, :]
+        lo = np.minimum(w * base[:, None], length[:, None])
+        hi = np.minimum((w + 1) * base[:, None], length[:, None])
+        hi[:, P - 1] = length
+        self._bounds[slots] = np.stack([lo, hi], axis=-1)
+        self._sid[slots] = 0
+        self._part[slots] = 0
+        self._win_lo[slots] = lo[:, 0]
+        self._win_hi[slots] = hi[:, 0]
+        self._pkts_seen[slots] = 0
+        self._recircs[slots] = 0
+        self._reset_admitted(np.sort(slots))
 
     # -- ingest ---------------------------------------------------------
     def ingest(self, batch) -> StreamVerdicts:
@@ -428,35 +576,13 @@ class FlowTableServer:
         arr = np.asarray(batch.arrival, np.float64)
         n = int(fid.shape[0])
         self.stats.packets += n
+        self.stats.ticks += 1
         out = _VerdictAccum()
 
         # route every packet: resident slot, spill store, or retired-drop
-        slot_pk = np.full(n, -1, np.int64)
-        admitted: list[int] = []
-        for i in range(n):
-            key = int(fid[i])
-            if key in self._retired:
-                continue
-            slot = self.table.lookup(key)
-            if slot is None:
-                if key in self._spill:
-                    slot_pk[i] = -2
-                    continue
-                slot = self.table.insert(key)
-                if slot is None:          # table full: host fallback
-                    self._spill[key] = _SpillFlow(length=int(flen[i]))
-                    self.stats.spilled += 1
-                    self.stats.flows_seen += 1
-                    slot_pk[i] = -2
-                    continue
-                self._admit(slot, int(flen[i]))
-                admitted.append(slot)
-            slot_pk[i] = slot
+        slot_pk = self._route_tick(fid, flen) if n else np.empty(0, np.int64)
         self.stats.peak_resident = max(self.stats.peak_resident,
                                        self.resident_flows)
-        if admitted:
-            # recycled slots carry the previous tenant's state/SID init
-            self._reset_admitted(np.asarray(sorted(set(admitted)), np.int64))
 
         spill_rows = np.nonzero(slot_pk == -2)[0]
         for i in spill_rows:
@@ -471,21 +597,25 @@ class FlowTableServer:
         self._run_spilled_complete(out)
         if self.timeout is not None and n:
             self._evict_timeouts(float(arr.max()), out)
-        self.stats.verdicts += len(out.flow_id)
+        self.stats.verdicts += out.n
         return out.build(self._plan)
 
     def flush(self) -> StreamVerdicts:
         """End of stream: evict every resident flow with sentinels."""
         out = _VerdictAccum()
         self._run_spilled_complete(out)
-        for slot in np.nonzero(self.table.key >= 0)[0]:
-            out.add(self.table.key[slot], -1, self._recircs[slot], -1)
-            self._evict(int(slot))
+        live = np.nonzero(self.table.key >= 0)[0]
+        if live.size:
+            neg = np.full(live.size, -1, np.int32)
+            out.add_batch(self.table.key[live], neg,
+                          self._recircs[live], neg)
+            for slot in live:
+                self._evict(int(slot))
         for key in list(self._spill):
             out.add(key, -1, 0, -1)
             del self._spill[key]
             self._retired.add(key)
-        self.stats.verdicts += len(out.flow_id)
+        self.stats.verdicts += out.n
         return out.build(self._plan)
 
     # -- device plumbing ------------------------------------------------
@@ -500,18 +630,65 @@ class FlowTableServer:
         self._acc, self._seen = _reset_rows(
             self._acc, self._seen, jnp.asarray(slots),
             jnp.zeros(cap, jnp.int32), self.engine.dev)
+        self.stats.dispatches += 1
 
-    def _process_resident(self, slots, fids, pkts, arr, out) -> None:
-        np.maximum.at(self._last_ts, slots, arr)
-        # rank r = the r-th packet of a flow within this tick: every
-        # rank addresses each slot at most once (unique-scatter), and
-        # rank order preserves per-flow arrival order (stable argsort)
+    @staticmethod
+    def _rank_decompose(slots: np.ndarray):
+        """(order, sorted slots, group id, rank) for one tick.
+
+        Rank r = the r-th packet of a flow within the tick: every rank
+        addresses each slot at most once (unique-scatter), and rank
+        order preserves per-flow arrival order (stable argsort) — the
+        reduction order the parity contract pins.
+        """
         order = np.argsort(slots, kind="stable")
         ss = slots[order]
         new_grp = np.r_[True, ss[1:] != ss[:-1]]
         grp_start = np.nonzero(new_grp)[0]
         grp_id = np.cumsum(new_grp) - 1
         rank = np.arange(ss.size) - grp_start[grp_id]
+        return order, ss, grp_id, rank
+
+    def _process_resident(self, slots, fids, pkts, arr, out) -> None:
+        np.maximum.at(self._last_ts, slots, arr)
+        if self.tick_engine == "fused":
+            self._process_resident_fused(slots, pkts, out)
+        else:
+            self._process_resident_legacy(slots, fids, pkts, out)
+
+    def _process_resident_fused(self, slots, pkts, out) -> None:
+        """One jitted dispatch for the whole tick, one bulk fetch.
+
+        The tick's packets are packed rank-major into ``(R, C)`` arrays
+        (column = the flow's group index, constant across ranks; unused
+        cells address the dummy row), padded on both axes to the
+        power-of-two ladder so jit compiles a handful of shapes.  The
+        retired-flow guard, IAT window reset, fold, completion hop, and
+        empty-window drain all run inside ``kernels.tick_step``.
+        """
+        order, ss, grp_id, rank = self._rank_decompose(slots)
+        R = _pow2_cap(int(rank.max()) + 1, 1)
+        C = _pow2_cap(int(grp_id[-1]) + 1, self._rank_floor)
+        slots_rc = np.full((R, C), self._dummy, np.int32)
+        pkt_rc = np.zeros((R, C, PKT_NFIELDS), np.float32)
+        slots_rc[rank, grp_id] = ss
+        pkt_rc[rank, grp_id] = pkts[order]
+        self._tstate, res = _tick.tick_step(
+            self._tstate, jnp.asarray(slots_rc), jnp.asarray(pkt_rc),
+            self.engine.dev, n_subtrees=self.S,
+            pallas=self._pallas, block_b=self._block_b)
+        self.stats.dispatches += 1
+        vm, vl, vr, ve, rec = (np.asarray(a) for a in jax.device_get(res))
+        self._recircs = rec                   # host mirror (flush/timeout)
+        done = np.nonzero(vm)[0]
+        if done.size:
+            out.add_batch(self.table.key[done], vl[done], vr[done],
+                          ve[done])
+            for slot in done:
+                self._evict(int(slot))
+
+    def _process_resident_legacy(self, slots, fids, pkts, out) -> None:
+        order, _, _, rank = self._rank_decompose(slots)
         for r in range(int(rank.max()) + 1):
             sel = order[rank == r]
             s = slots[sel]
@@ -542,12 +719,14 @@ class FlowTableServer:
             self._acc, self._seen, jnp.asarray(pkt), jnp.asarray(sid),
             jnp.asarray(slots), self.engine.dev,
             pallas=self._pallas, block_b=self._block_b)
+        self.stats.dispatches += 1
 
     def _hop_drain(self, s: np.ndarray, out: _VerdictAccum) -> None:
         """Hop the completed slots; drain any windows that complete
         immediately after (flows shorter than P packets have empty
         trailing windows — the walk still traverses them, so we do
-        too).  Terminates: every drain round advances the partition."""
+        too).  Terminates: every drain round advances the partition.
+        Per-slot bookkeeping is vectorized with numpy masks."""
         while s.size:
             cap, slots = self._pad_slots(s)
             sid = np.zeros(cap, np.int32)
@@ -561,30 +740,28 @@ class FlowTableServer:
                 jnp.asarray(sid), jnp.asarray(p_rows), jnp.asarray(rec),
                 self.engine.dev, n_subtrees=self.S,
                 pallas=self._pallas, block_b=self._block_b)
+            self.stats.dispatches += 1
             self._acc, self._seen = res[0], res[1]
             labels, done, sid2, rec2, exit_p = (
                 np.asarray(a)[:s.size] for a in jax.device_get(res[2:]))
-            nxt: list[int] = []
-            for j, slot in enumerate(s):
-                slot = int(slot)
-                if done[j]:
-                    out.add(self.table.key[slot], labels[j], rec2[j],
-                            exit_p[j])
-                    self._evict(slot)
-                elif self._part[slot] == self.P - 1:
-                    # fell off the last partition: -1 sentinels
-                    out.add(self.table.key[slot], -1, rec2[j], -1)
-                    self._evict(slot)
-                else:
-                    self._sid[slot] = sid2[j]
-                    self._recircs[slot] = rec2[j]
-                    self._part[slot] += 1
-                    lo, hi = self._bounds[slot, self._part[slot]]
-                    self._win_lo[slot] = lo
-                    self._win_hi[slot] = hi
-                    if lo == hi:              # empty window: hop again
-                        nxt.append(slot)
-            s = np.asarray(nxt, np.int64)
+            done = done.astype(bool)
+            # exits emit verdicts; flows falling off the last partition
+            # emit -1 sentinels; the rest advance to the next window
+            fin = done | (self._part[s] == self.P - 1)
+            if fin.any():
+                out.add_batch(self.table.key[s[fin]],
+                              np.where(done, labels, -1)[fin], rec2[fin],
+                              np.where(done, exit_p, -1)[fin])
+                for slot in s[fin]:
+                    self._evict(int(slot))
+            sa = s[~fin]
+            self._sid[sa] = sid2[~fin]
+            self._recircs[sa] = rec2[~fin]
+            self._part[sa] += 1
+            b = self._bounds[sa, self._part[sa]]
+            self._win_lo[sa] = b[:, 0]
+            self._win_hi[sa] = b[:, 1]
+            s = sa[b[:, 0] == b[:, 1]]        # empty window: hop again
 
     # -- host fallbacks -------------------------------------------------
     def _run_spilled_complete(self, out: _VerdictAccum) -> None:
@@ -609,20 +786,23 @@ class FlowTableServer:
                 wp[idx, w, :hi - lo] = win
         res = self.engine.run(wp, with_trace=False,
                               options=self._spill_options)
-        for idx, key in enumerate(done):
-            out.add(key, res.labels[idx], res.recircs[idx],
-                    res.exit_partition[idx])
+        out.add_batch(np.asarray(done, np.int64), np.asarray(res.labels),
+                      np.asarray(res.recircs),
+                      np.asarray(res.exit_partition))
+        for key in done:
             del self._spill[key]
             self._retired.add(key)
 
     def _evict_timeouts(self, now: float, out: _VerdictAccum) -> None:
         stale = np.nonzero((self.table.key >= 0)
                            & (now - self._last_ts > self.timeout))[0]
-        for slot in stale:
-            slot = int(slot)
-            out.add(self.table.key[slot], -1, self._recircs[slot], -1)
-            self._evict(slot)
-            self.stats.evicted += 1
+        if stale.size:
+            neg = np.full(stale.size, -1, np.int32)
+            out.add_batch(self.table.key[stale], neg,
+                          self._recircs[stale], neg)
+            for slot in stale:
+                self._evict(int(slot))
+            self.stats.evicted += int(stale.size)
         for key, f in list(self._spill.items()):
             if now - f.last_ts > self.timeout:
                 out.add(key, -1, 0, -1)

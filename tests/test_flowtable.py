@@ -13,7 +13,10 @@ from repro.core.inference import Engine, EngineOptions, EngineResult
 from repro.flows.synthetic import PacketBatch, make_packet_stream
 from repro.flows.windows import window_bounds, window_packets
 from repro.kernels import ref as kref
-from repro.kernels.feature_window import feature_update_pallas
+from repro.kernels.feature_window import (
+    feature_update_finalize_pallas,
+    feature_update_pallas,
+)
 from repro.serve import FlowTableServer, StreamVerdict, StreamVerdicts
 from repro.testing.hypothesis_compat import given, settings, strategies as st
 
@@ -76,6 +79,40 @@ def test_incremental_fold_matches_rebuilt_window(serve_setup, impl):
                     win[:, t], op, fld, prd, acc, seen)
         got = kref.feature_finalize_ref(acc, seen, op, init)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_fused_update_finalize_matches_composition(serve_setup, impl):
+    """The tick-step kernel fuses fold and finalize into one pass; its
+    registers AND its carried (acc, seen) must be bit-identical to the
+    two-call composition at every packet position — otherwise the fused
+    tick engine would drift from the legacy per-rank dispatches."""
+    eng, tr, wp, _, _ = serve_setup
+    dev = eng.dev
+    B, _, W, _ = wp.shape
+    for w in range(P):
+        win = jnp.asarray(wp[:, w])
+        sid = jnp.zeros(B, jnp.int32)
+        op = dev.slot_op[sid]
+        fld = dev.slot_field[sid]
+        prd = dev.slot_pred[sid]
+        init = dev.slot_init[sid]
+        acc, seen = kref.feature_state_init(op)
+        for t in range(W):
+            wa, ws = kref.feature_update_ref(win[:, t], op, fld, prd,
+                                             acc, seen)
+            want = kref.feature_finalize_ref(wa, ws, op, init)
+            if impl == "ref":
+                a2, s2, regs = kref.feature_update_finalize_ref(
+                    win[:, t], op, fld, prd, init, acc, seen)
+            else:
+                a2, s2, regs = feature_update_finalize_pallas(
+                    win[:, t], op, fld, prd, init, acc, seen)
+            np.testing.assert_array_equal(np.asarray(a2), np.asarray(wa))
+            np.testing.assert_array_equal(np.asarray(s2), np.asarray(ws))
+            np.testing.assert_array_equal(np.asarray(regs),
+                                          np.asarray(want))
+            acc, seen = a2, s2
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +217,108 @@ def test_late_packets_for_retired_flow_are_dropped(serve_setup):
 
 
 # ---------------------------------------------------------------------------
+# adversarial tick shapes: deep rank chains, mid-tick hops, slot reuse
+# ---------------------------------------------------------------------------
+def _flow_batch(tr, sel, t0=0.0, extra_tail=0):
+    """One tick delivering each selected flow IN FULL (rank depth = flow
+    length), optionally followed by ``extra_tail`` duplicate copies of
+    the first flow's last packet — late arrivals past flow_len."""
+    sel = list(sel)
+    fid = np.concatenate(
+        [np.full(int(tr.lengths[i]), i, np.int64) for i in sel])
+    pkts = np.concatenate(
+        [tr.packets[i, :int(tr.lengths[i])] for i in sel])
+    if extra_tail:
+        i = sel[0]
+        last = tr.packets[i, int(tr.lengths[i]) - 1][None]
+        fid = np.concatenate([fid, np.full(extra_tail, i, np.int64)])
+        pkts = np.concatenate([pkts, np.repeat(last, extra_tail, axis=0)])
+    flen = tr.lengths[fid].astype(np.int32)
+    arr = t0 + np.arange(fid.size, dtype=np.float64)
+    return PacketBatch(fid, flen, pkts.astype(np.float32), arr)
+
+
+def _assert_subset_matches(v, full, fids):
+    assert sorted(map(int, v.flow_id)) == sorted(map(int, fids))
+    for j in range(v.n_flows):
+        i = int(v.flow_id[j])
+        assert int(v.labels[j]) == int(full.labels[i]), i
+        assert int(v.recircs[j]) == int(full.recircs[i]), i
+        assert int(v.exit_partition[j]) == int(full.exit_partition[i]), i
+
+
+@pytest.mark.parametrize("impl", ["fused", "pallas"])
+def test_whole_flow_ticks_recycle_slots(serve_setup, impl):
+    """Capacity-ONE table fed whole flows: every tick completes its
+    resident flow mid-tick (the deepest rank chain possible), frees the
+    slot, and the next tick's flow recycles it; the companion flow
+    spills to the host each round.  Both paths must match the batch
+    walk bit for bit."""
+    eng, tr, _, full, _ = serve_setup
+    fids = list(range(24))
+    srv = FlowTableServer(eng, n_buckets=1, bucket_size=1, rank_floor=1,
+                          tick_engine="fused",
+                          options=EngineOptions(impl=impl))
+    parts = [srv.ingest(_flow_batch(tr, (i, i + 1), t0=1e3 * i))
+             for i in range(0, 24, 2)]
+    parts.append(srv.flush())
+    v = StreamVerdicts.concat(parts)
+    assert srv.stats.spilled > 0          # capacity 1: companions spill
+    _assert_subset_matches(v, full, fids)
+
+
+@pytest.mark.parametrize("tick_engine", ["fused", "legacy"])
+def test_interleaved_boundary_hops_mid_tick(serve_setup, tick_engine):
+    """Round-robin interleave of 16 flows in ONE tick: every window
+    boundary, hop, and drain round lands mid-tick, with many flows
+    completing in the same rank — the worst case for the in-jit hop
+    bookkeeping (fused) and the vectorized drain masks (legacy)."""
+    eng, tr, _, full, _ = serve_setup
+    sel = list(range(40, 56))
+    maxlen = max(int(tr.lengths[i]) for i in sel)
+    fid_rows, pkt_rows = [], []
+    for j in range(maxlen):
+        for i in sel:
+            if j < int(tr.lengths[i]):
+                fid_rows.append(i)
+                pkt_rows.append(tr.packets[i, j])
+    fid = np.asarray(fid_rows, np.int64)
+    batch = PacketBatch(fid, tr.lengths[fid].astype(np.int32),
+                        np.asarray(pkt_rows, np.float32),
+                        np.arange(fid.size, dtype=np.float64))
+    srv = FlowTableServer(eng, n_buckets=4, bucket_size=4,
+                          tick_engine=tick_engine)
+    v = StreamVerdicts.concat([srv.ingest(batch), srv.flush()])
+    _assert_subset_matches(v, full, sel)
+
+
+@pytest.mark.parametrize("tick_engine", ["fused", "legacy"])
+def test_late_packets_cannot_corrupt_recycled_slot(serve_setup,
+                                                   tick_engine):
+    """A flow completes mid-tick, duplicate tail packets of it keep
+    arriving in the SAME tick (must not fold into anything), then a new
+    flow takes the freed slot next tick while yet more late packets of
+    the retired flow arrive — they must not fold into the new tenant."""
+    eng, tr, _, full, _ = serve_setup
+    a, b = 3, 5
+    srv = FlowTableServer(eng, n_buckets=1, bucket_size=1,
+                          tick_engine=tick_engine)
+    v1 = srv.ingest(_flow_batch(tr, [a], extra_tail=3))
+    assert v1.n_flows == 1                # a completed despite the dups
+    t2 = _flow_batch(tr, [b], t0=1e6, extra_tail=0)
+    late = _flow_batch(tr, [a], t0=2e6).pkts[-2:]
+    t2 = PacketBatch(
+        np.concatenate([t2.flow_id, np.full(2, a, np.int64)]),
+        np.concatenate([t2.flow_len,
+                        tr.lengths[[a, a]].astype(np.int32)]),
+        np.concatenate([t2.pkts, late]),
+        np.arange(t2.flow_id.size + 2, dtype=np.float64) + 1e6)
+    v2 = srv.ingest(t2)
+    v = StreamVerdicts.concat([v1, v2, srv.flush()])
+    _assert_subset_matches(v, full, [a, b])
+
+
+# ---------------------------------------------------------------------------
 # padding-leak property: ticks/capacity/impl must never change verdicts
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=1)
@@ -218,6 +357,7 @@ def test_flowtable_padding_never_leaks(seed):
         options=EngineOptions(
             impl=("fused", "pallas")[int(rng.integers(0, 2))]),
         rank_floor=int(rng.integers(1, 65)),
+        tick_engine=("fused", "legacy")[int(rng.integers(0, 2))],
     )
     v = _serve_all(srv, stream, tick=int(rng.integers(1, 300)))
     _assert_verdicts_match(v, full, tr.n_flows)
