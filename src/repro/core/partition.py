@@ -106,9 +106,12 @@ class PartitionedDT:
         n = X_windows.shape[0]
         sid = np.zeros(n, dtype=np.int64)            # all flows start at root
         done = np.zeros(n, dtype=bool)
-        label = np.zeros(n, dtype=np.int64)
+        # verdict arrays start at the -1 sentinel (docs/PARITY.md §2): a
+        # flow that never takes an exit action keeps it, so a corrupt/
+        # truncated model can't silently claim class 0 at partition 0
+        label = np.full(n, -1, dtype=np.int64)
         recircs = np.zeros(n, dtype=np.int64)
-        exit_partition = np.zeros(n, dtype=np.int64)
+        exit_partition = np.full(n, -1, dtype=np.int64)
         for p in range(self.n_partitions):
             active_sids = self.sids_in_partition(p)
             for s_id in active_sids:
@@ -128,12 +131,8 @@ class PartitionedDT:
                 recircs[cont] += 1                    # one control packet
         # a flow still active after the last partition never took an exit
         # action (possible only for corrupt/truncated models — training
-        # exits every leaf of the final partition).  Report the same -1
-        # sentinels as the engine backends: a silent majority-class (or
-        # class-0) verdict here is indistinguishable from a real exit.
-        if not done.all():
-            label[~done] = -1
-            exit_partition[~done] = -1
+        # exits every leaf of the final partition) and keeps the -1
+        # sentinels it was initialised with, matching the engine backends
         if return_trace:
             return label, recircs, exit_partition
         return label

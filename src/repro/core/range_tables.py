@@ -63,7 +63,9 @@ class RangeExecTables:
         """-> (is_exit, next_sid, label)"""
         is_exit = action >= self.n_subtrees
         next_sid = np.where(is_exit, 0, action)
-        label = np.where(is_exit, action - self.n_subtrees, 0)
+        # non-exit rows carry the -1 sentinel (docs/PARITY.md §2), never
+        # a fake class 0
+        label = np.where(is_exit, action - self.n_subtrees, -1)
         return is_exit, next_sid, label
 
 

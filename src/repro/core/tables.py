@@ -67,7 +67,9 @@ def pack_tables(pdt: PartitionedDT) -> PackedTables:
     node_left = np.zeros((S, M), dtype=np.int32)
     node_right = np.zeros((S, M), dtype=np.int32)
     leaf_next_sid = np.full((S, M), EXIT, dtype=np.int32)
-    leaf_label = np.zeros((S, M), dtype=np.int32)
+    # -1 sentinel on non-leaf rows (docs/PARITY.md §2); only leaf rows
+    # are ever written with a real class below
+    leaf_label = np.full((S, M), -1, dtype=np.int32)
     slot_fid = np.full((S, k), -1, dtype=np.int32)
     slot_op = np.zeros((S, k), dtype=np.int32)
     slot_field = np.zeros((S, k), dtype=np.int32)
@@ -99,7 +101,7 @@ def pack_tables(pdt: PartitionedDT) -> PackedTables:
                 node_right[s, i] = t.right[i]
             else:
                 leaf_next_sid[s, i] = st.leaf_next_sid.get(i, EXIT)
-                leaf_label[s, i] = st.leaf_label.get(i, 0)
+                leaf_label[s, i] = st.leaf_label.get(i, -1)
 
     return PackedTables(
         node_feat_slot=node_feat_slot, node_thresh=node_thresh,

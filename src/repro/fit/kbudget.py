@@ -83,5 +83,6 @@ def distinct_feature_count(feature: jnp.ndarray, n_features: int) -> jnp.ndarray
     """Number of distinct features a flat ``feature`` array uses (>= 0
     entries) -- the quantity the budget caps; handy for property tests."""
     f = jnp.asarray(feature)
-    onehot = (f[:, None] == jnp.arange(n_features)[None, :]) & (f[:, None] >= 0)
+    onehot = (f[:, None] == jnp.arange(n_features, dtype=jnp.int32)[None, :]) \
+        & (f[:, None] >= 0)
     return onehot.any(axis=0).sum()

@@ -97,6 +97,7 @@ def compact_perm(done: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """
     B = done.shape[0]
     perm = jnp.argsort(done, stable=True)
+    # splint: allow[R001]: int32 survivor count — exact, order-invariant
     n_active = (B - jnp.sum(done.astype(jnp.int32))).astype(jnp.int32)
     return perm, n_active
 

@@ -99,15 +99,18 @@ def sid_dispatch(sid: jnp.ndarray, *, n_subtrees: int,
     B = sid.shape[0]
     counts = jnp.bincount(sid, length=n_subtrees)            # (S,)
     bps = -(-counts // block_b)                              # blocks per SID
+    # splint: allow[R001]: int32 block offsets — exact, order-invariant
     block_end = jnp.cumsum(bps)
     block_start = block_end - bps
+    # splint: allow[R001]: int32 segment offsets — exact, order-invariant
     seg_start = jnp.cumsum(counts) - counts                  # sorted offsets
     order = jnp.argsort(sid, stable=True)
     ssid = sid[order]
     rank = jnp.arange(B, dtype=counts.dtype) - seg_start[ssid]
     dest = block_start[ssid] * block_b + rank
     nb = capacity_blocks(B, n_subtrees, block_b)
-    block_sid = jnp.searchsorted(block_end, jnp.arange(nb), side="right")
+    block_sid = jnp.searchsorted(block_end, jnp.arange(nb, dtype=jnp.int32),
+                                 side="right")
     block_sid = jnp.minimum(block_sid, n_subtrees - 1).astype(jnp.int32)
     return SidDispatch(order=order, dest=dest, block_sid=block_sid)
 

@@ -241,7 +241,6 @@ def chunk_scan(
     if q.shape[1] % min(chunk, q.shape[1]) != 0:
         # pad T to a chunk multiple with zero decay-neutral steps
         T = q.shape[1]
-        C = min(chunk, T) if T >= chunk else T
         pad = (-T) % chunk if T > chunk else 0
         if pad:
             zq = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0)))

@@ -102,7 +102,6 @@ def build_cell(cfg: ArchConfig, shape: ShapeCfg, mesh, layout: str = "base"):
 
         return fn, (state_sds, batch_sds), (state_sh, batch_sh), defs, None, None
 
-    cache_len = shape.seq_len
     cache_sds = model_zoo.abstract_cache(cfg, shape)
     cache_specs = jax.tree.map(
         lambda x: sharding.cache_spec(mesh, tuple(x.shape), cfg,

@@ -61,7 +61,6 @@ def mla_attention(
     """MLA self-attention; cache holds {c_kv (B,S,R), k_rope (B,S,1,dr), len}."""
     m = cfg.mla
     B, T, _ = x.shape
-    H = cfg.n_heads
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     q_nope, q_rope, c_kv, k_rope = _project_latents(p, x, m, cfg)
 

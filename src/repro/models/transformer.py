@@ -147,7 +147,6 @@ def forward(
         img = img @ params["img_proj"].astype(COMPUTE_DTYPE)
         x = jnp.concatenate([img, x], axis=1)
         prefix_len = cfg.n_image_tokens
-        T = x.shape[1]
     if cfg.arch_id.startswith("paligemma") or cfg.tie_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma convention
     x = L.shard(x, L.BATCH_AXES, None, None)

@@ -140,3 +140,6 @@ except ModuleNotFoundError:
             del wrapper.__wrapped__
             return wrapper
         return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "HealthCheck", "assume", "given",
+           "settings", "strategies"]

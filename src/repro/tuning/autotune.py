@@ -211,6 +211,8 @@ def time_plan(engine: "Engine", win_pkts: np.ndarray, plan: Plan, *,
     backend = backend_for_plan(plan)
 
     def call():
+        # splint: allow[R005]: ExecutionBackend protocol run() — compact/
+        # compact_floor are real parameters here, not the Engine shim
         return backend.run(engine, win_pkts, with_trace=False,
                            compact=plan.compact,
                            compact_floor=plan.compact_floor)

@@ -23,6 +23,7 @@ from repro.flows.synthetic import make_dataset
 from repro.flows.windows import window_features, window_packets
 from repro.kernels.dispatch import capacity_blocks, sid_dispatch
 from repro.testing.hypothesis_compat import given, settings, strategies as st
+from repro.core.inference import EngineOptions
 
 
 # ---------------------------------------------------------------------------
@@ -100,8 +101,8 @@ def test_pallas_backend_identical_to_fused_and_looped(backend_setup):
     labels identical to fused and looped — same trees, same windows,
     zero tolerance."""
     pdt, Xw, wp, eng = backend_setup
-    fused = eng.run(wp, with_trace=True, impl="fused")
-    pallas = eng.run(wp, with_trace=True, impl="pallas")
+    fused = eng.run(wp, with_trace=True, options=EngineOptions(impl="fused"))
+    pallas = eng.run(wp, with_trace=True, options=EngineOptions(impl="pallas"))
     looped = eng.run_looped(wp)
     _assert_identical(pallas, fused)
     _assert_identical(pallas, looped)
@@ -114,7 +115,7 @@ def test_pallas_backend_identical_to_fused_and_looped(backend_setup):
 def test_pallas_backend_matches_oracle_exactly(backend_setup):
     pdt, Xw, wp, eng = backend_setup
     labels, recircs, exit_p = pdt.predict(Xw, return_trace=True)
-    res = eng.run(wp, with_trace=False, impl="pallas")
+    res = eng.run(wp, with_trace=False, options=EngineOptions(impl="pallas"))
     np.testing.assert_array_equal(res.labels, labels)
     np.testing.assert_array_equal(res.recircs, recircs)
     np.testing.assert_array_equal(res.exit_partition, exit_p)
@@ -129,7 +130,7 @@ def test_pallas_single_device_round_trip(backend_setup, monkeypatch):
     real = jax.device_get
     monkeypatch.setattr(inf.jax, "device_get",
                         lambda tree: calls.append(1) or real(tree))
-    eng.run(wp, with_trace=False, impl="pallas")
+    eng.run(wp, with_trace=False, options=EngineOptions(impl="pallas"))
     assert len(calls) == 1
 
 
@@ -147,8 +148,8 @@ def test_backend_equivalence_property_random_trees(seed):
     pdt = train_partitioned_dt(Xw, ds.labels, partition_sizes=sizes, k=k)
     wp = window_packets(ds, p)
     eng = Engine.from_model(pdt)
-    fused = eng.run(wp, with_trace=False, impl="fused")
-    pallas = eng.run(wp, with_trace=False, impl="pallas")
+    fused = eng.run(wp, with_trace=False, options=EngineOptions(impl="fused"))
+    pallas = eng.run(wp, with_trace=False, options=EngineOptions(impl="pallas"))
     looped = eng.run_looped(wp, with_trace=False)
     _assert_identical(pallas, fused)
     _assert_identical(pallas, looped)

@@ -24,6 +24,7 @@ from repro.flows.synthetic import (
 from repro.flows.windows import window_features, window_packets
 from repro.kernels.compaction import bucket_caps, compact_perm
 from repro.testing.hypothesis_compat import given, settings, strategies as st
+from repro.core.inference import EngineOptions
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +96,7 @@ def compact_setup(trained_pdt):
 
 def test_compact_fused_bit_identical(compact_setup):
     pdt, wp, eng, dense, (labels, recircs, exit_p) = compact_setup
-    comp = eng.run(wp, with_trace=True, compact=True)
+    comp = eng.run(wp, with_trace=True, options=EngineOptions(compact=True))
     _assert_identical(comp, dense)
     np.testing.assert_array_equal(comp.labels, labels)
     np.testing.assert_array_equal(comp.recircs, recircs)
@@ -108,7 +109,7 @@ def test_compact_trace_is_survivor_masked(compact_setup):
     bit-identical to the dense trace (same per-flow math, just gathered
     through the capacity bucket and scattered back)."""
     pdt, wp, eng, dense, _ = compact_setup
-    comp = eng.run(wp, with_trace=True, compact=True)
+    comp = eng.run(wp, with_trace=True, options=EngineOptions(compact=True))
     assert len(comp.regs_trace) == len(dense.regs_trace)
     exited_before = np.full(wp.shape[0], False)
     for p, (c, d) in enumerate(zip(comp.regs_trace, dense.regs_trace)):
@@ -120,7 +121,7 @@ def test_compact_trace_is_survivor_masked(compact_setup):
 
 def test_compact_looped_bit_identical(compact_setup):
     pdt, wp, eng, dense, _ = compact_setup
-    _assert_identical(eng.run_looped(wp, compact=True), dense)
+    _assert_identical(eng.run_looped(wp, options=EngineOptions(compact=True)), dense)
 
 
 def test_compact_pallas_bit_identical(compact_setup):
@@ -129,7 +130,7 @@ def test_compact_pallas_bit_identical(compact_setup):
     bit-identical.  Sliced batch keeps interpret-mode compile sane."""
     pdt, wp, eng, dense, _ = compact_setup
     B = 256
-    comp = eng.run(wp[:B], with_trace=False, impl="pallas", compact=True)
+    comp = eng.run(wp[:B], with_trace=False, options=EngineOptions(impl="pallas", compact=True))
     np.testing.assert_array_equal(comp.labels, dense.labels[:B])
     np.testing.assert_array_equal(comp.recircs, dense.recircs[:B])
     np.testing.assert_array_equal(comp.exit_partition,
@@ -150,8 +151,9 @@ def test_compact_profiles_all_backends_match_oracle(profile):
     wp = window_packets(tr, 3)
     labels, recircs, exit_p = pdt.predict(Xw, return_trace=True)
     eng = Engine.from_model(pdt)
-    for kw in (dict(impl="fused"), dict(impl="pallas"), dict(impl="looped")):
-        res = eng.run(wp, with_trace=False, compact=True, **kw)
+    for kw in ({"impl": "fused"}, {"impl": "pallas"}, {"impl": "looped"}):
+        res = eng.run(wp, with_trace=False,
+                      options=EngineOptions(compact=True, **kw))
         np.testing.assert_array_equal(res.labels, labels, err_msg=str(kw))
         np.testing.assert_array_equal(res.recircs, recircs, err_msg=str(kw))
         np.testing.assert_array_equal(res.exit_partition, exit_p,
@@ -174,8 +176,8 @@ def test_compact_property_random_trees(seed):
     wp = window_packets(ds, p)
     eng = Engine.from_model(pdt)
     dense = eng.run(wp, with_trace=False)
-    _assert_identical(eng.run(wp, with_trace=False, compact=True), dense)
-    _assert_identical(eng.run_looped(wp, with_trace=False, compact=True),
+    _assert_identical(eng.run(wp, with_trace=False, options=EngineOptions(compact=True)), dense)
+    _assert_identical(eng.run_looped(wp, with_trace=False, options=EngineOptions(compact=True)),
                       dense)
     np.testing.assert_array_equal(dense.labels, pdt.predict(Xw))
 
@@ -237,7 +239,7 @@ def test_non_terminating_streaming_dtype_stable():
     pdt, Xw, wp = _truncated_model()
     eng = Engine.from_model(pdt)
     full = eng.run(wp, with_trace=False)
-    res = run_streaming(eng, wp, micro_batch=100)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=100))
     _assert_identical(res, full)
     assert res.labels.dtype == np.int32
     assert res.exit_partition.dtype == np.int32

@@ -59,9 +59,11 @@ def test_options_replace_is_functional():
 def test_engine_run_legacy_kwargs_warn(setup):
     eng, wp = setup
     with pytest.warns(DeprecationWarning, match="impl"):
-        legacy = eng.run(wp, with_trace=False, impl="fused")
+        legacy = eng.run(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            wp, with_trace=False, impl="fused")
     with pytest.warns(DeprecationWarning, match="compact"):
-        eng.run(wp[:16], with_trace=False, compact=True)
+        eng.run(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            wp[:16], with_trace=False, compact=True)
     new = eng.run(wp, with_trace=False,
                   options=EngineOptions(impl="fused"))
     _assert_same(legacy, new)
@@ -70,24 +72,29 @@ def test_engine_run_legacy_kwargs_warn(setup):
 def test_run_streaming_legacy_kwargs_warn(setup):
     eng, wp = setup
     with pytest.warns(DeprecationWarning, match="micro_batch"):
-        legacy = run_streaming(eng, wp, micro_batch=64)
+        legacy = run_streaming(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            eng, wp, micro_batch=64)
     new = run_streaming(eng, wp,
                         options=EngineOptions(micro_batch=64))
     _assert_same(legacy, new)
     with pytest.warns(DeprecationWarning, match="inflight"):
-        run_streaming(eng, wp[:32], inflight=1)
+        run_streaming(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            eng, wp[:32], inflight=1)
     with pytest.warns(DeprecationWarning, match="compact"):
-        run_streaming(eng, wp[:32], compact=True)
+        run_streaming(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            eng, wp[:32], compact=True)
 
 
 def test_engine_method_shims_warn(setup):
     eng, wp = setup
     with pytest.warns(DeprecationWarning, match="micro_batch"):
-        legacy = eng.run_streaming(wp, micro_batch=48)
+        legacy = eng.run_streaming(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            wp, micro_batch=48)
     new = eng.run_streaming(wp, options=EngineOptions(micro_batch=48))
     _assert_same(legacy, new)
     with pytest.warns(DeprecationWarning, match="compact"):
-        looped = eng.run_looped(wp[:24], with_trace=False, compact=True)
+        looped = eng.run_looped(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            wp[:24], with_trace=False, compact=True)
     _assert_same(looped, eng.run_looped(
         wp[:24], with_trace=False, options=EngineOptions(compact=True)))
 
@@ -106,9 +113,11 @@ def test_options_path_is_warning_free(setup):
 def test_mixing_options_and_legacy_raises(setup):
     eng, wp = setup
     with pytest.raises(ValueError, match="not both"):
-        eng.run(wp, options=EngineOptions(), impl="fused")
+        eng.run(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            wp, options=EngineOptions(), impl="fused")
     with pytest.raises(ValueError, match="not both"):
-        run_streaming(eng, wp, options=EngineOptions(), micro_batch=8)
+        run_streaming(  # splint: allow[R005]: exercises the deprecation shim on purpose
+            eng, wp, options=EngineOptions(), micro_batch=8)
 
 
 # ---------------------------------------------------------------------------

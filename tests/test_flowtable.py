@@ -176,7 +176,6 @@ def test_flush_mid_window_emits_sentinels(serve_setup):
     # flows that DID complete in the half-stream match the batch run
     done = v1.flow_id[np.asarray(v1.exit_partition) >= 0]
     if done.size:
-        order = np.argsort(v1.flow_id)
         full_by_id = {int(i): (int(full.labels[i]), int(full.recircs[i]),
                                int(full.exit_partition[i]))
                       for i in done}

@@ -1,0 +1,332 @@
+"""splint: every rule fires on a seeded violation, stays silent on the
+clean tree, and the suppression/autofix machinery holds its contracts.
+
+The fixtures are deliberately tiny known-bad snippets (docs/ANALYSIS.md
+documents each rule); the clean-tree test is the acceptance bar the CI
+splint job enforces: ``python -m tools.splint src tests benchmarks``
+exits 0 on the landed tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tools.splint import RULES, fix_source, lint_source, render_json
+from tools.splint.__main__ import REPO, main
+
+KPATH = "src/repro/kernels/fixture.py"      # parity-critical scope
+CPATH = "src/repro/core/fixture.py"         # general src scope
+TPATH = "tests/fixture.py"                  # tests scope (R005)
+
+# Spelled via a variable so the pragma scanner (line-based, by design)
+# never sees a literal pragma on a physical line of THIS file — splint
+# lints its own test suite as part of the clean-tree acceptance test.
+SP = "splint"
+
+
+def codes(src: str, path: str = CPATH) -> list[str]:
+    return [d.code for d in lint_source(src, path)]
+
+
+# ---------------------------------------------------------------------------
+# one seeded violation per rule
+# ---------------------------------------------------------------------------
+
+def test_r001_fires_on_stray_reduction_in_kernels():
+    src = "import jax.numpy as jnp\ndef f(x):\n    return jnp.sum(x, axis=1)\n"
+    assert codes(src, KPATH) == ["R001"]
+    # the same code outside kernels//fit/ is not parity-critical
+    assert codes(src, CPATH) == []
+
+
+def test_r001_covers_dot_cumsum():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x, w):\n"
+           "    return jnp.dot(x, w) + jnp.cumsum(x, axis=0)\n")
+    assert codes(src, "src/repro/fit/fixture.py") == ["R001", "R001"]
+
+
+def test_r002_fires_on_host_sync_in_jit_helper():
+    src = (
+        "import jax\nimport jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def root(x):\n"
+        "    return helper(x)\n"
+        "def helper(x):\n"
+        "    return float(x.mean().item())\n")
+    got = codes(src, KPATH)
+    assert "R002" in got                      # .item() in a reachable helper
+
+
+def test_r002_reaches_through_the_call_graph_not_everything():
+    src = (
+        "import jax\nimport jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def root(x):\n"
+        "    return x\n"
+        "def cold_path(x):\n"
+        "    return x.item()\n")              # NOT reachable from root
+    assert codes(src, KPATH) == []
+
+
+def test_r002_static_shapes_do_not_fire():
+    src = (
+        "import functools\nimport jax\nimport numpy as np\n"
+        "@functools.partial(jax.jit, static_argnames=('n',))\n"
+        "def root(x, n):\n"
+        "    m = int(x.shape[0])\n"
+        "    k = int(np.prod(x.shape))\n"
+        "    j = int(n)\n"
+        "    return x[: m + k + j]\n")
+    assert codes(src, KPATH) == []
+
+
+def test_r003_fires_and_scopes():
+    src = "import jax.numpy as jnp\nx = jnp.zeros((4, 4))\n"
+    assert codes(src) == ["R003"]
+    ok = ("import jax.numpy as jnp\n"
+          "a = jnp.zeros((4,), jnp.int32)\n"          # positional dtype
+          "b = jnp.full((4,), -1, jnp.int32)\n"
+          "c = jnp.arange(4, dtype=jnp.int32)\n")
+    assert codes(ok) == []
+    # excluded LM prototype tree: same violation, no diagnostic
+    assert codes(src, "src/repro/models/fixture.py") == []
+
+
+def test_r004_fires_on_global_rng_allows_seeded():
+    bad = "import numpy as np\nx = np.random.rand(3)\nnp.random.seed(0)\n"
+    assert codes(bad) == ["R004", "R004"]
+    ok = ("import numpy as np\n"
+          "rng = np.random.default_rng(np.random.SeedSequence([1, 2]))\n"
+          "def f(r: np.random.Generator):\n    return r\n")
+    assert codes(ok) == []
+    unseeded = "import numpy as np\nrng = np.random.default_rng()\n"
+    assert codes(unseeded) == ["R004"]
+
+
+def test_r005_fires_on_legacy_engine_kwargs():
+    src = "def f(eng, wp):\n    return eng.run(wp, impl='fused')\n"
+    assert codes(src, TPATH) == ["R005"]
+    # options= is the blessed spelling
+    ok = ("def f(eng, wp, EngineOptions):\n"
+          "    return eng.run(wp, options=EngineOptions(impl='fused'))\n")
+    assert codes(ok, TPATH) == []
+    # the shim file itself is exempt
+    assert codes(src, "src/repro/core/inference.py") == []
+
+
+def test_r006_fires_on_tracer_branch():
+    src = (
+        "import jax\nimport jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def root(x):\n"
+        "    if jnp.any(x > 0):\n"
+        "        return x\n"
+        "    while jnp.sum(x) > 0:\n"
+        "        x = x - 1\n"
+        "    return x\n")
+    assert codes(src, KPATH).count("R006") == 2
+    # static python branches stay legal
+    ok = ("import jax\n"
+          "@jax.jit\n"
+          "def root(x, flag=None):\n"
+          "    if flag is None:\n"
+          "        return x\n"
+          "    return x + 1\n")
+    assert codes(ok, KPATH) == []
+
+
+def test_r007_fires_on_donated_buffer_reuse():
+    src = (
+        "import jax\n"
+        "def raw(s):\n    return s\n"
+        "step = jax.jit(raw, donate_argnums=(0,))\n"
+        "def loop(state):\n"
+        "    out = step(state)\n"
+        "    return state + out\n")              # reads the dead buffer
+    assert codes(src) == ["R007"]
+    # rebinding the result is the blessed pattern
+    ok = (
+        "import jax\n"
+        "def raw(s):\n    return s\n"
+        "step = jax.jit(raw, donate_argnums=(0,))\n"
+        "def loop(state):\n"
+        "    for _ in range(3):\n"
+        "        state = step(state)\n"
+        "    return state\n")
+    assert codes(ok) == []
+
+
+def test_r008_fires_on_zero_sentinel():
+    bad = ("import numpy as np\n"
+           "labels = np.zeros(8)\n"
+           "exit_partition = np.full(8, 0)\n")
+    assert codes(bad) == ["R008", "R008"]
+    ok = "import numpy as np\nlabels = np.full(8, -1, np.int32)\n"
+    assert codes(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# suppression pragmas
+# ---------------------------------------------------------------------------
+
+def test_pragma_with_reason_suppresses():
+    src = ("import jax.numpy as jnp\n"
+           f"x = jnp.zeros((4,))  # {SP}: allow[R003]: fixture\n")
+    assert codes(src) == []
+
+
+def test_own_line_pragma_covers_next_statement():
+    src = ("import jax.numpy as jnp\n"
+           f"# {SP}: allow[R003]: fixture reason spanning\n"
+           "# a continuation comment line\n"
+           "x = jnp.zeros((4,))\n")
+    assert codes(src) == []
+
+
+def test_pragma_without_reason_is_r000():
+    src = ("import jax.numpy as jnp\n"
+           f"x = jnp.zeros((4,))  # {SP}: allow[R003]\n")
+    assert codes(src) == ["R000"]
+
+
+def test_unused_pragma_is_r000():
+    src = ("import jax.numpy as jnp\n"
+           f"x = jnp.zeros((4,), jnp.int32)  # {SP}: allow[R003]: stale\n")
+    assert codes(src) == ["R000"]
+
+
+def test_unknown_code_pragma_is_r000():
+    src = f"x = 1  # {SP}: allow[R999]: no such rule\n"
+    assert codes(src) == ["R000"]
+
+
+def test_pragma_only_suppresses_listed_codes():
+    src = ("import jax.numpy as jnp\n"
+           f"labels = jnp.zeros((4,))  # {SP}: allow[R003]: fixture\n")
+    assert codes(src) == ["R008"]            # R008 not listed -> survives
+
+
+# ---------------------------------------------------------------------------
+# autofix (R003 dtype insertion, R005 options= rewrite)
+# ---------------------------------------------------------------------------
+
+def test_fix_r003_inserts_inferred_dtype():
+    src = ("import jax.numpy as jnp\n"
+           "a = jnp.zeros((4, 4))\n"
+           "b = jnp.full((2,), -1)\n"
+           "c = jnp.arange(8)\n"
+           "d = jnp.arange(0.0, 1.0)\n")
+    fixed, n = fix_source(src, CPATH)
+    assert n == 4
+    assert "jnp.zeros((4, 4), dtype=jnp.float32)" in fixed
+    assert "jnp.full((2,), -1, dtype=jnp.int32)" in fixed
+    assert "jnp.arange(8, dtype=jnp.int32)" in fixed
+    assert "jnp.arange(0.0, 1.0, dtype=jnp.float32)" in fixed
+    assert [d.code for d in lint_source(fixed, CPATH)] == []
+
+
+def test_fix_r005_rewrites_to_options():
+    src = ("from repro.core.inference import EngineOptions\n"
+           "def f(eng, wp):\n"
+           "    return eng.run(wp, with_trace=False, impl='fused', "
+           "compact=True)\n")
+    fixed, n = fix_source(src, TPATH)
+    assert n == 1
+    assert ("eng.run(wp, with_trace=False, "
+            "options=EngineOptions(impl='fused', compact=True))") in fixed
+    assert [d.code for d in lint_source(fixed, TPATH)] == []
+
+
+def test_fix_r005_adds_missing_import():
+    src = ("import numpy as np\n"
+           "def f(eng, wp):\n"
+           "    return eng.run_streaming(wp, micro_batch=64)\n")
+    fixed, _ = fix_source(src, TPATH)
+    assert "from repro.core.inference import EngineOptions" in fixed
+    # the import lands after the existing import block
+    assert fixed.index("import numpy") < fixed.index("EngineOptions")
+
+
+def test_fix_r005_skips_kwargs_splat_and_mixing():
+    src = ("def f(eng, wp, kw, o):\n"
+           "    eng.run(wp, compact=True, **kw)\n"
+           "    eng.run(wp, options=o, impl='fused')\n")
+    fixed, n = fix_source(src, TPATH)
+    assert n == 0 and fixed == src           # unsafe: left for a human
+
+
+def test_fix_is_idempotent():
+    src = ("import jax.numpy as jnp\n"
+           "a = jnp.zeros((4, 4))\n"
+           "def f(eng, wp):\n"
+           "    return eng.run(wp, impl='fused')\n")
+    once, n1 = fix_source(src, CPATH)
+    twice, n2 = fix_source(once, CPATH)
+    assert n1 > 0 and n2 == 0 and twice == once
+
+
+def test_fixed_snippet_respects_pragmas():
+    src = ("import jax.numpy as jnp\n"
+           f"a = jnp.zeros((4,))  # {SP}: allow[R003]: stay implicit\n")
+    fixed, n = fix_source(src, CPATH)
+    assert n == 0 and fixed == src
+
+
+# ---------------------------------------------------------------------------
+# registry / output / CLI / acceptance
+# ---------------------------------------------------------------------------
+
+def test_every_rule_registered_with_doc():
+    assert sorted(RULES) == [f"R00{i}" for i in range(1, 9)]
+    for r in RULES.values():
+        assert r.doc and r.name
+
+
+def test_json_report_shape():
+    diags = lint_source("import jax.numpy as jnp\nx = jnp.zeros((1,))\n",
+                        CPATH)
+    payload = json.loads(render_json(diags))
+    assert payload["count"] == 1
+    (d,) = payload["diagnostics"]
+    assert d["code"] == "R003" and d["path"] == CPATH
+    assert d["line"] == 2 and d["fixable"] is True
+
+
+def test_cli_select_unknown_code_errors():
+    assert main(["--select", "R999", "src"]) == 2
+
+
+def test_clean_tree_src_is_clean():
+    """Acceptance bar: zero unsuppressed diagnostics on the landed tree
+    (and every suppression carries a reason, or R000 would fire)."""
+    assert main(["src"]) == 0
+
+
+def test_clean_tree_tests_benchmarks_clean():
+    assert main(["tests", "benchmarks"]) == 0
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(REPO, "tools")),
+                    reason="needs repo checkout")
+def test_cli_subprocess_json(tmp_path):
+    """`python -m tools.splint` (the CI invocation) works end to end."""
+    # R002 applies on any path (src-scoped rules would skip a tmp file)
+    bad = tmp_path / "fixture.py"
+    bad.write_text("import jax\n"
+                   "@jax.jit\n"
+                   "def f(x):\n"
+                   "    return x.item()\n")
+    out = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.splint", str(bad),
+         "--format=json", "--output", str(out)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 1
+    payload = json.loads(out.read_text())
+    assert payload["count"] >= 1
+    assert payload["diagnostics"][0]["code"] == "R002"

@@ -11,6 +11,7 @@ from repro.flows.synthetic import make_dataset
 from repro.flows.windows import window_features, window_packets
 from repro.serve.streaming import microbatches, run_streaming, stream_batches
 from repro.testing.hypothesis_compat import given, settings, strategies as st
+from repro.core.inference import EngineOptions
 
 
 @pytest.fixture(scope="module")
@@ -42,7 +43,7 @@ def test_streaming_equals_full_batch(stream_setup, micro_batch):
     """Every chunking — single-flow, ragged tail, one giant chunk —
     reproduces the full-batch fused run exactly."""
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp, micro_batch=micro_batch)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=micro_batch))
     _assert_same(res, full)
 
 
@@ -50,7 +51,7 @@ def test_streaming_matches_oracle(stream_setup):
     """End-to-end: chunked streaming still equals the numpy oracle
     (labels AND recirculation counts — the bandwidth model's input)."""
     eng, wp, _, (labels, recircs, exit_p) = stream_setup
-    res = eng.run_streaming(wp, micro_batch=50)
+    res = eng.run_streaming(wp, options=EngineOptions(micro_batch=50))
     np.testing.assert_array_equal(res.labels, labels)
     np.testing.assert_array_equal(res.recircs, recircs)
     np.testing.assert_array_equal(res.exit_partition, exit_p)
@@ -63,7 +64,7 @@ def test_streaming_padded_tail_is_isolated(stream_setup):
     eng, wp, full, _ = stream_setup
     B = wp.shape[0]
     mb = B - 1            # tail chunk holds exactly 1 real flow
-    res = run_streaming(eng, wp, micro_batch=mb)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=mb))
     _assert_same(res, full)
 
 
@@ -72,7 +73,7 @@ def test_stream_batches_generator(stream_setup):
     eng, wp, full, _ = stream_setup
     cuts = [0, 13, 200, wp.shape[0]]
     parts = [wp[a:b] for a, b in zip(cuts, cuts[1:])]
-    outs = list(stream_batches(eng, parts, micro_batch=64))
+    outs = list(stream_batches(eng, parts, options=EngineOptions(micro_batch=64)))
     assert len(outs) == len(parts)
     labels = np.concatenate([o.labels for o in outs])
     recircs = np.concatenate([o.recircs for o in outs])
@@ -83,7 +84,7 @@ def test_stream_batches_generator(stream_setup):
 def test_streaming_donate_flag_explicit(stream_setup):
     """donate=False must be honoured on any backend and stay exact."""
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp, micro_batch=33, donate=False)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=33, donate=False))
     _assert_same(res, full)
 
 
@@ -92,17 +93,17 @@ def test_streaming_pipelining_depth(stream_setup, inflight):
     """Async in-flight dispatch (any depth) must not change verdicts —
     chunks complete out of the host loop but land in the right rows."""
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp, micro_batch=40, inflight=inflight)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=40, inflight=inflight))
     _assert_same(res, full)
     with pytest.raises(ValueError):
-        run_streaming(eng, wp, inflight=0)
+        run_streaming(eng, wp, options=EngineOptions(inflight=0))
 
 
 def test_streaming_pallas_backend(stream_setup):
     """The in-jit SID dispatch makes the Pallas walk streamable (the
     host-grouped PR 1 path had to reject this); verdicts identical."""
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp[:96], micro_batch=32, impl="pallas")
+    res = run_streaming(eng, wp[:96], options=EngineOptions(micro_batch=32, impl="pallas"))
     np.testing.assert_array_equal(res.labels, full.labels[:96])
     np.testing.assert_array_equal(res.recircs, full.recircs[:96])
     np.testing.assert_array_equal(res.exit_partition, full.exit_partition[:96])
@@ -111,7 +112,7 @@ def test_streaming_pallas_backend(stream_setup):
 def test_streaming_rejects_looped_backend(stream_setup):
     eng, wp, _, _ = stream_setup
     with pytest.raises(ValueError, match="walk backend"):
-        run_streaming(eng, wp, impl="looped")
+        run_streaming(eng, wp, options=EngineOptions(impl="looped"))
 
 
 @pytest.mark.parametrize("micro_batch", [40, 10_000])
@@ -120,14 +121,13 @@ def test_streaming_compact_equals_full_batch(stream_setup, micro_batch):
     padded ragged tail, whose padding rows all 'exit' immediately and
     get compacted away) must not change a single verdict."""
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp, micro_batch=micro_batch, compact=True)
+    res = run_streaming(eng, wp, options=EngineOptions(micro_batch=micro_batch, compact=True))
     _assert_same(res, full)
 
 
 def test_streaming_compact_pallas(stream_setup):
     eng, wp, full, _ = stream_setup
-    res = run_streaming(eng, wp[:96], micro_batch=32, impl="pallas",
-                        compact=True)
+    res = run_streaming(eng, wp[:96], options=EngineOptions(micro_batch=32, impl="pallas", compact=True))
     np.testing.assert_array_equal(res.labels, full.labels[:96])
     np.testing.assert_array_equal(res.recircs, full.recircs[:96])
     np.testing.assert_array_equal(res.exit_partition, full.exit_partition[:96])
@@ -159,9 +159,7 @@ def test_streaming_padding_never_leaks_property(seed):
     B = wp.shape[0]
     for _ in range(3):
         mb = int(rng.integers(1, B + 40))
-        res = run_streaming(eng, wp, micro_batch=mb,
-                            inflight=int(rng.integers(1, 4)),
-                            compact=bool(rng.integers(0, 2)))
+        res = run_streaming(eng, wp, options=EngineOptions(micro_batch=mb, inflight=int(rng.integers(1, 4)), compact=bool(rng.integers(0, 2))))
         np.testing.assert_array_equal(res.labels, full.labels)
         np.testing.assert_array_equal(res.recircs, full.recircs)
         np.testing.assert_array_equal(res.exit_partition,

@@ -43,6 +43,7 @@ from repro.tuning.autotune import (
     load_cache,
     save_cache,
 )
+from repro.core.inference import EngineOptions
 
 
 def _shape(B=1024, S=9, k=4, P=3, W=32, T=8, L=16, **kw):
@@ -241,9 +242,9 @@ def _assert_identical(a, b):
 
 def test_auto_impl_bit_identical_and_emits_plan(tuned_engine):
     eng, wp, pdt, Xw = tuned_engine
-    auto = eng.run(wp, with_trace=False, impl="auto")
+    auto = eng.run(wp, with_trace=False, options=EngineOptions(impl="auto"))
     assert auto.plan is not None and auto.plan.source == "costmodel"
-    forced = eng.run(wp, with_trace=False, impl=auto.plan.backend)
+    forced = eng.run(wp, with_trace=False, options=EngineOptions(impl=auto.plan.backend))
     assert forced.plan is None               # forced impls carry no plan
     _assert_identical(auto, forced)
     # ... and to the offline oracle
@@ -256,11 +257,13 @@ def test_auto_impl_bit_identical_and_emits_plan(tuned_engine):
 def test_tuned_impl_bit_identical_to_routed_backend(tuned_engine,
                                                     tune_cache):
     eng, wp, _, _ = tuned_engine
-    tuned = eng.run(wp, with_trace=False, impl="tuned")
+    tuned = eng.run(wp, with_trace=False, options=EngineOptions(impl="tuned"))
     assert tuned.plan is not None and tuned.plan.source == "timed"
-    again = eng.run(wp, with_trace=False, impl="tuned")
+    again = eng.run(wp, with_trace=False, options=EngineOptions(impl="tuned"))
     assert again.plan.source == "cache"
     assert again.plan.backend == tuned.plan.backend
+    # splint: allow[R005]: ExecutionBackend protocol run() — compact is a
+    # real parameter here, not the Engine deprecation shim
     forced = backend_for_plan(again.plan).run(
         eng, wp, with_trace=False, compact=again.plan.compact,
         compact_floor=again.plan.compact_floor)
@@ -270,23 +273,23 @@ def test_tuned_impl_bit_identical_to_routed_backend(tuned_engine,
 
 def test_compact_auto_resolves_via_plan(tuned_engine):
     eng, wp, _, _ = tuned_engine
-    res = eng.run(wp, with_trace=False, impl="fused", compact="auto")
+    res = eng.run(wp, with_trace=False, options=EngineOptions(impl="fused", compact="auto"))
     assert res.plan is not None and res.plan.backend == "fused"
-    _assert_identical(res, eng.run(wp, with_trace=False, impl="fused"))
+    _assert_identical(res, eng.run(wp, with_trace=False, options=EngineOptions(impl="fused")))
 
 
 def test_streaming_auto_and_tuned_parity(tuned_engine, tune_cache):
     eng, wp, _, _ = tuned_engine
-    full = eng.run(wp, with_trace=False, impl="fused")
-    auto = run_streaming(eng, wp, micro_batch=96, impl="auto")
+    full = eng.run(wp, with_trace=False, options=EngineOptions(impl="fused"))
+    auto = run_streaming(eng, wp, options=EngineOptions(micro_batch=96, impl="auto"))
     assert auto.plan is not None
     assert auto.plan.backend in ("fused", "pallas")   # walk backends only
     _assert_identical(auto, full)
-    tuned = run_streaming(eng, wp, micro_batch=96, impl="tuned")
+    tuned = run_streaming(eng, wp, options=EngineOptions(micro_batch=96, impl="tuned"))
     assert tuned.plan is not None
     _assert_identical(tuned, full)
     # fixed impl: no plan attached
-    assert run_streaming(eng, wp, micro_batch=96, impl="fused").plan is None
+    assert run_streaming(eng, wp, options=EngineOptions(micro_batch=96, impl="fused")).plan is None
 
 
 def test_custom_block_b_backend_bit_identical(tuned_engine):
@@ -294,7 +297,7 @@ def test_custom_block_b_backend_bit_identical(tuned_engine):
     default walk bit-for-bit (registers included)."""
     eng, wp, _, _ = tuned_engine
     assert pallas_backend(128) is PALLAS_BACKEND
-    ref = eng.run(wp[:96], with_trace=True, impl="fused")
+    ref = eng.run(wp[:96], with_trace=True, options=EngineOptions(impl="fused"))
     for bb in (32, 64):
         res = pallas_backend(bb).run(eng, wp[:96], with_trace=True)
         _assert_identical(res, ref)
@@ -304,8 +307,10 @@ def test_custom_block_b_backend_bit_identical(tuned_engine):
 
 def test_compact_floor_bit_identical(tuned_engine):
     eng, wp, _, _ = tuned_engine
-    dense = eng.run(wp, with_trace=False, impl="fused")
+    dense = eng.run(wp, with_trace=False, options=EngineOptions(impl="fused"))
     for floor in (32, 256):
+        # splint: allow[R005]: ExecutionBackend protocol run() —
+        # compact/compact_floor are real parameters here, not the shim
         res = backend_for_plan(
             Plan(backend="fused", compact=True, compact_floor=floor)).run(
                 eng, wp, with_trace=False, compact=True,

@@ -1,0 +1,26 @@
+"""splint — repo-specific static analysis for the SpliDT reproduction.
+
+Enforces the parity, dispatch, and dtype contracts (docs/ANALYSIS.md)
+at lint time::
+
+    python -m tools.splint src tests benchmarks           # text report
+    python -m tools.splint src --format=json              # CI artifact
+    python -m tools.splint src --fix                      # R003/R005
+
+Importing :mod:`tools.splint.rules` populates the registry as a side
+effect, so ``from tools.splint import lint_source`` is ready to use.
+"""
+from tools.splint.core import (            # noqa: F401  (public surface)
+    Diagnostic,
+    Fix,
+    LintContext,
+    RULES,
+    Rule,
+    lint_source,
+    render_json,
+    render_text,
+)
+from tools.splint import rules as _rules   # noqa: F401  (registers rules)
+from tools.splint.autofix import fix_file, fix_source  # noqa: F401
+
+__version__ = "0.1.0"

@@ -1,0 +1,97 @@
+"""CLI: ``python -m tools.splint [paths...] [options]``.
+
+Exit status 0 when the tree is clean (every diagnostic suppressed with
+a reasoned pragma), 1 when any diagnostic remains, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from tools.splint import (
+    RULES, Diagnostic, fix_file, lint_source, render_json, render_text)
+from tools.splint.core import iter_py_files
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+
+
+def _rel(path: str) -> str:
+    """Repo-relative path with forward slashes (drives rule scoping)."""
+    ap = os.path.abspath(path)
+    try:
+        rel = os.path.relpath(ap, REPO)
+    except ValueError:          # different drive (windows)
+        rel = path
+    return rel.replace(os.sep, "/")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.splint",
+        description="repo-specific static analysis: parity, dispatch "
+                    "and dtype contracts (docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
+                    help="files or directories (default: %(default)s)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", metavar="CODES",
+                    help="comma-separated rule codes to run (default all)")
+    ap.add_argument("--fix", action="store_true",
+                    help="apply autofixes for the mechanical rules "
+                         "(R003 dtype insertion, R005 options= rewrite)")
+    ap.add_argument("--output", metavar="FILE",
+                    help="write the report here as well as stdout")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, r in sorted(RULES.items()):
+            print(f"{code}  {r.name}\n      {r.doc}")
+        return 0
+
+    select = None
+    if args.select:
+        select = {c.strip() for c in args.select.split(",") if c.strip()}
+        unknown = select - set(RULES) - {"R000"}
+        if unknown:
+            print(f"unknown rule code(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    files = list(iter_py_files(args.paths))
+    if not files:
+        print("no python files found", file=sys.stderr)
+        return 2
+
+    if args.fix:
+        n_fixed = 0
+        for f in files:
+            n_fixed += fix_file(f, _rel(f))
+        print(f"splint --fix: {n_fixed} fix(es) applied "
+              f"across {len(files)} file(s)")
+        # fall through: report whatever is left after fixing
+
+    diags: list[Diagnostic] = []
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            diags.extend(lint_source(source, _rel(f), select=select))
+        except SyntaxError as e:
+            diags.append(Diagnostic(_rel(f), e.lineno or 0, 0, "R000",
+                                    f"syntax error: {e.msg}"))
+
+    report = (render_json(diags) if args.format == "json"
+              else render_text(diags))
+    print(report)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(report + "\n")
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

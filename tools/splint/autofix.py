@@ -1,0 +1,96 @@
+"""Autofixes for the mechanical rules (``python -m tools.splint --fix``).
+
+Only diagnostics that carry a :class:`tools.splint.core.Fix` are
+rewritten — today that is R003 (insert the dtype jax would infer, so
+the edit is semantics-preserving) and R005 (fold legacy engine kwargs
+into ``options=EngineOptions(...)``).  Fixes are applied bottom-up by
+absolute offset so earlier edits never shift later spans, overlapping
+fixes are skipped, and the whole pass is idempotent: a fixed file
+re-lints clean for the fixable rules, so ``fix(fix(src)) == fix(src)``
+(pinned by ``tests/test_splint.py``).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.splint.core import lint_source
+
+__all__ = ["fix_source", "fix_file"]
+
+_EO_IMPORT = "from repro.core.inference import EngineOptions\n"
+
+
+def _line_offsets(source: str) -> list[int]:
+    offsets = [0]
+    for line in source.splitlines(keepends=True):
+        offsets.append(offsets[-1] + len(line))
+    return offsets
+
+
+def _binds_engine_options(source: str) -> bool:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return True          # don't touch imports we can't parse
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if any(a.name == "EngineOptions" or a.asname == "EngineOptions"
+                   for a in node.names):
+                return True
+        elif isinstance(node, (ast.ClassDef, ast.Assign)):
+            names = [node.name] if isinstance(node, ast.ClassDef) else [
+                t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "EngineOptions" in names:
+                return True
+    return False
+
+
+def _add_engine_options_import(source: str) -> str:
+    """Insert the EngineOptions import after the last top-level import."""
+    tree = ast.parse(source)
+    last_import_line = 0
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            last_import_line = max(last_import_line,
+                                   node.end_lineno or node.lineno)
+    lines = source.splitlines(keepends=True)
+    return "".join(lines[:last_import_line] + [_EO_IMPORT]
+                   + lines[last_import_line:])
+
+
+def fix_source(source: str, path: str) -> tuple[str, int]:
+    """Apply every available fix once; returns (new_source, n_applied)."""
+    diags = lint_source(source, path)
+    fixes = [d for d in diags if d.fix is not None]
+    if not fixes:
+        return source, 0
+    offs = _line_offsets(source)
+    spans = []
+    for d in fixes:
+        f = d.fix
+        spans.append((offs[f.line - 1] + f.col_start,
+                      offs[f.end_line - 1] + f.col_end, f.replacement, d))
+    spans.sort(key=lambda s: (s[0], s[1]))
+    # drop overlaps (keep the earlier span)
+    kept, last_end = [], -1
+    for start, end, rep, d in spans:
+        if start >= last_end:
+            kept.append((start, end, rep, d))
+            last_end = end
+    out = source
+    for start, end, rep, _d in reversed(kept):
+        out = out[:start] + rep + out[end:]
+    if any(d.code == "R005" for *_x, d in kept) and \
+            not _binds_engine_options(source):
+        out = _add_engine_options_import(out)
+    return out, len(kept)
+
+
+def fix_file(path: str, rel_path: str) -> int:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    fixed, n = fix_source(source, rel_path)
+    if n and fixed != source:
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(fixed)
+    return n

@@ -1,0 +1,142 @@
+"""Lightweight per-module jit call-graph for the R002/R006/R007 rules.
+
+"Lightweight" is deliberate: resolution is by bare function name within
+one module (including nested and method defs), which is exactly how the
+repro codebase is written — jit roots and their helpers live together
+(``kernels/tick_step.py``, ``serve/flowtable.py``, ...).  Cross-module
+helpers are out of scope; the contract rules catch the overwhelmingly
+common failure (a host sync added to a helper three calls below a
+``@jax.jit``) without a whole-program analysis.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+__all__ = ["JitGraph", "build"]
+
+_JIT_NAMES = {"jit"}          # bare `@jit` (from jax import jit)
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """`jax.jit` / `jit` / `jax.pjit` as an expression."""
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("jit", "pjit") and isinstance(
+            node.value, ast.Name) and node.value.id == "jax"
+    return isinstance(node, ast.Name) and node.id in _JIT_NAMES
+
+
+def _is_partial(node: ast.AST) -> bool:
+    if isinstance(node, ast.Attribute):
+        return node.attr == "partial"
+    return isinstance(node, ast.Name) and node.id == "partial"
+
+
+def _jit_call_info(call: ast.Call) -> dict | None:
+    """If ``call`` is ``jax.jit(...)`` or ``partial(jax.jit, ...)``,
+    return its keyword map (static_argnames/static_argnums/
+    donate_argnums as literal values where possible), else None."""
+    if _is_jax_jit(call.func):
+        args = call.args
+    elif _is_partial(call.func) and call.args and _is_jax_jit(call.args[0]):
+        args = call.args[1:]
+    else:
+        return None
+    info: dict = {"wrapped": None, "static": set(), "donate": ()}
+    if args and isinstance(args[0], ast.Name):
+        info["wrapped"] = args[0].id
+    for kw in call.keywords:
+        try:
+            val = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            continue
+        if kw.arg == "static_argnames":
+            val = (val,) if isinstance(val, str) else val
+            info["static"] |= set(val)
+        elif kw.arg == "static_argnums":
+            info["static_nums"] = tuple(val) if isinstance(
+                val, (tuple, list)) else (val,)
+        elif kw.arg == "donate_argnums":
+            info["donate"] = tuple(val) if isinstance(
+                val, (tuple, list)) else (val,)
+    return info
+
+
+@dataclasses.dataclass
+class JitGraph:
+    #: every def in the module by bare name (nested + methods included)
+    functions: dict[str, ast.FunctionDef]
+    #: names of defs that are jit entry points
+    roots: set[str]
+    #: per-root statically-known argument names (static_argnames)
+    static_args: dict[str, set[str]]
+    #: names bound to `jax.jit(fn, donate_argnums=(...))` -> donated idx
+    donated: dict[str, tuple[int, ...]]
+    #: roots ∪ every def reachable from a root by bare-name calls
+    reachable: set[str]
+
+    def is_traced_scope(self, fn: ast.FunctionDef) -> bool:
+        return fn.name in self.reachable
+
+
+def _called_names(fn: ast.FunctionDef) -> set[str]:
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name):
+                out.add(f.id)
+            elif isinstance(f, ast.Attribute):
+                out.add(f.attr)      # self.helper(...) / mod.helper(...)
+    return out
+
+
+def build(tree: ast.Module) -> JitGraph:
+    functions: dict[str, ast.FunctionDef] = {}
+    roots: set[str] = set()
+    static_args: dict[str, set[str]] = {}
+    donated: dict[str, tuple[int, ...]] = {}
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            functions.setdefault(node.name, node)
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec):
+                    roots.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    info = _jit_call_info(dec)
+                    if info is not None:
+                        roots.add(node.name)
+                        static_args[node.name] = info["static"]
+
+    # `x = jax.jit(fn, ...)` / bare `jax.jit(fn)` expressions: `fn`
+    # becomes a root; donate_argnums recorded under the bound name `x`.
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        info = _jit_call_info(node)
+        if info is None or _is_partial(node.func):
+            continue
+        if info["wrapped"]:
+            roots.add(info["wrapped"])
+            static_args[info["wrapped"]] = info["static"]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            info = _jit_call_info(node.value)
+            if info and info["donate"]:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        donated[tgt.id] = info["donate"]
+
+    reachable = set(roots)
+    frontier = list(roots)
+    while frontier:
+        name = frontier.pop()
+        fn = functions.get(name)
+        if fn is None:
+            continue
+        for callee in _called_names(fn):
+            if callee in functions and callee not in reachable:
+                reachable.add(callee)
+                frontier.append(callee)
+    return JitGraph(functions, roots, static_args, donated, reachable)

@@ -1,0 +1,238 @@
+"""splint core: diagnostics, suppression pragmas, the rule registry.
+
+The analyzer is deliberately boring machinery: a rule is a function
+``(LintContext) -> Iterable[Diagnostic]`` registered with
+:func:`rule`; :func:`lint_source` parses one file, runs every rule
+whose ``applies`` predicate matches the repo-relative path, then folds
+in the suppression pragmas.  All repo knowledge lives in
+``tools.splint.rules``; everything here is reusable plumbing.
+
+Suppression syntax (see ``docs/ANALYSIS.md``)::
+
+    x = jnp.cumsum(counts)  # splint: allow[R001]: int32 offsets, exact
+
+A pragma suppresses the listed codes on its own line; a pragma on a
+line by itself covers the *next* source line (for statements too long
+to share a line with a justification).  The reason text after the
+trailing ``:`` is mandatory — a reasonless or unused pragma is itself
+reported as **R000**, so the suppression inventory can never rot.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from typing import Callable, Iterable, Iterator
+
+__all__ = [
+    "Diagnostic", "Fix", "LintContext", "Rule", "RULES", "rule",
+    "lint_source", "render_text", "render_json",
+]
+
+#: Trees outside the SpliDT reproduction proper (the LM-serving
+#: prototype kept for the roofline/bench harness).  None of the parity
+#: or dispatch contracts apply there, so every rule skips them; the
+#: rationale lives in README.md ("what splint covers").
+EXCLUDED_TREES = (
+    "src/repro/models/",
+    "src/repro/configs/",
+    "src/repro/train/",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fix:
+    """One mechanical text edit: replace the span from ``(line,
+    col_start)`` to ``(end_line, col_end)`` (1-based lines, 0-based
+    cols) with ``replacement``."""
+    line: int
+    col_start: int
+    end_line: int
+    col_end: int
+    replacement: str
+
+
+@dataclasses.dataclass
+class Diagnostic:
+    path: str           # repo-relative path as given to lint_source
+    line: int           # 1-based
+    col: int            # 0-based
+    code: str           # "R001" ... "R008" ("R000" = pragma misuse)
+    message: str
+    fix: Fix | None = None
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "code": self.code, "message": self.message,
+                "fixable": self.fix is not None}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class LintContext:
+    """Parsed view of one file handed to every rule."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+
+    # -- path classification helpers -----------------------------------
+    def in_tree(self, *prefixes: str) -> bool:
+        return any(self.path.startswith(p) for p in prefixes)
+
+    @property
+    def excluded(self) -> bool:
+        return self.in_tree(*EXCLUDED_TREES)
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.source, node) or ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    doc: str
+    applies: Callable[[LintContext], bool]
+    check: Callable[[LintContext], Iterable[Diagnostic]]
+
+
+RULES: dict[str, Rule] = {}
+
+
+def rule(code: str, name: str, doc: str,
+         applies: Callable[[LintContext], bool]):
+    """Register ``check(ctx)`` under ``code``; used as a decorator."""
+    def register(check):
+        RULES[code] = Rule(code, name, doc, applies, check)
+        return check
+    return register
+
+
+# ---------------------------------------------------------------------------
+# suppression pragmas
+# ---------------------------------------------------------------------------
+
+_PRAGMA = re.compile(
+    r"#\s*splint:\s*allow\[(?P<codes>[A-Z0-9,\s]+)\]"
+    r"(?::\s*(?P<reason>.*\S))?\s*$")
+
+
+@dataclasses.dataclass
+class _Pragma:
+    line: int            # line the pragma text sits on
+    target: int          # line it suppresses
+    codes: tuple[str, ...]
+    reason: str | None
+    used: bool = False
+
+
+def _collect_pragmas(ctx: LintContext) -> list[_Pragma]:
+    out = []
+    for ln, text in enumerate(ctx.lines, 1):
+        m = _PRAGMA.search(text)
+        if not m:
+            continue
+        codes = tuple(c.strip() for c in m.group("codes").split(",") if c.strip())
+        own_line = text[:m.start()].strip() == ""
+        target = ln
+        if own_line:
+            # an own-line pragma covers the next statement line; skip
+            # over continuation comment lines (multi-line reasons)
+            target = ln + 1
+            while target <= len(ctx.lines) and \
+                    ctx.lines[target - 1].lstrip().startswith("#"):
+                target += 1
+        out.append(_Pragma(line=ln, target=target,
+                           codes=codes, reason=m.group("reason")))
+    return out
+
+
+def lint_source(source: str, path: str,
+                select: Iterable[str] | None = None) -> list[Diagnostic]:
+    """Lint one file's source. ``path`` must be repo-relative (it drives
+    each rule's ``applies`` scoping).  Returns unsuppressed diagnostics
+    plus any R000 pragma-hygiene findings, sorted by position.
+
+    >>> lint_source("import jax.numpy as jnp\\nx = jnp.arange(8)\\n",
+    ...             "src/repro/kernels/demo.py")[0].code
+    'R003'
+    """
+    ctx = LintContext(path, source)
+    diags: list[Diagnostic] = []
+    for r in RULES.values():
+        if select is not None and r.code not in select:
+            continue
+        if ctx.excluded or not r.applies(ctx):
+            continue
+        diags.extend(r.check(ctx))
+
+    pragmas = _collect_pragmas(ctx)
+    by_target: dict[int, list[_Pragma]] = {}
+    for p in pragmas:
+        by_target.setdefault(p.target, []).append(p)
+
+    kept: list[Diagnostic] = []
+    for d in diags:
+        suppressed = False
+        for p in by_target.get(d.line, ()):
+            if d.code in p.codes:
+                p.used = True
+                suppressed = True
+        if not suppressed:
+            kept.append(d)
+
+    for p in pragmas:
+        unknown = [c for c in p.codes if c not in RULES and c != "R000"]
+        if unknown:
+            kept.append(Diagnostic(
+                ctx.path, p.line, 0, "R000",
+                f"suppression names unknown rule code(s) {', '.join(unknown)}"))
+        if not p.reason:
+            kept.append(Diagnostic(
+                ctx.path, p.line, 0, "R000",
+                "suppression without a reason — write "
+                "`# splint: allow[%s]: <why this is safe>`"
+                % ",".join(p.codes)))
+        if p.used is False and not unknown and (
+                select is None or any(c in select for c in p.codes)):
+            kept.append(Diagnostic(
+                ctx.path, p.line, 0, "R000",
+                f"unused suppression for {', '.join(p.codes)} "
+                "— nothing fires here; delete the pragma"))
+
+    kept.sort(key=lambda d: (d.path, d.line, d.col, d.code))
+    return kept
+
+
+# ---------------------------------------------------------------------------
+# rendering
+# ---------------------------------------------------------------------------
+
+def render_text(diags: list[Diagnostic]) -> str:
+    lines = [d.render() for d in diags]
+    lines.append(f"splint: {len(diags)} diagnostic(s)")
+    return "\n".join(lines)
+
+
+def render_json(diags: list[Diagnostic]) -> str:
+    return json.dumps({"diagnostics": [d.as_dict() for d in diags],
+                       "count": len(diags)}, indent=2)
+
+
+def iter_py_files(paths: list[str]) -> Iterator[str]:
+    import os
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
