@@ -73,6 +73,8 @@ from repro.serve.streaming import run_streaming
 
 JSON_PATH_ENV = "BENCH_ENGINE_JSON"
 DEFAULT_JSON_PATH = "BENCH_engine.json"
+METRICS_PATH_ENV = "METRICS_ENGINE_JSON"
+DEFAULT_METRICS_PATH = "METRICS_engine.json"
 
 
 def _tiled_windows(te, p: int, n_flows: int) -> np.ndarray:
@@ -99,8 +101,25 @@ def _write_json(results: list[dict], mode: str) -> str:
     return path
 
 
+def _write_metrics(mode: str) -> str:
+    """Snapshot the engine-side observability registry accumulated over
+    the whole bench run (per-hop survivors, compaction bucket occupancy,
+    dispatch counts — see ``docs/OBSERVABILITY.md``)."""
+    from repro import obs
+    path = os.environ.get(METRICS_PATH_ENV, DEFAULT_METRICS_PATH)
+    with open(path, "w") as f:
+        json.dump({"bench": "engine", "mode": mode,
+                   "registry": obs.get_registry().snapshot()}, f, indent=2)
+        f.write("\n")
+    return path
+
+
 def run(quick: bool = True, smoke: bool = False):
     import jax
+    from repro import obs
+
+    # fresh registry: the artifact carries exactly this run's walks
+    obs.set_registry(obs.MetricRegistry())
 
     rows: list[Row] = []
     results: list[dict] = []
@@ -356,8 +375,10 @@ def run(quick: bool = True, smoke: bool = False):
             else:
                 os.environ[CACHE_ENV] = old
 
-    path = _write_json(results, "smoke" if smoke else
-                       ("quick" if quick else "full"))
+    mode = "smoke" if smoke else ("quick" if quick else "full")
+    path = _write_json(results, mode)
+    mpath = _write_metrics(mode)
     import sys
     print(f"# bench_engine: wrote {path}", file=sys.stderr)
+    print(f"# bench_engine: wrote {mpath}", file=sys.stderr)
     return rows

@@ -31,7 +31,12 @@ The fused tick engine sweeps tick sizes (64/256/1024) — bigger ticks
 amortise the fixed two dispatches over more packets, which is the whole
 perf story on dispatch-bound hosts.  Both arrival profiles (``steady``,
 ``bursty``) run so the tail latency rows capture burst behaviour, not
-just the uniform-arrival best case.  Verdict parity is not re-checked
+just the uniform-arrival best case.  Alongside the timing rows, each
+timed cell's full ``MetricRegistry.snapshot()`` (TTD histogram, recirc
+overhead, dispatch counters — see ``docs/OBSERVABILITY.md``) lands in
+``METRICS_serve.json`` (override: METRICS_SERVE_JSON env var), schema-
+checked in CI by ``tools/check_metrics.py``.  Verdict parity is not
+re-checked
 here — ``tests/test_flowtable.py`` and ``tests/test_tick_engine.py``
 hold every cell bit-identical to the batch walk."""
 from __future__ import annotations
@@ -46,6 +51,8 @@ from benchmarks.common import Row, dataset, splidt_model
 
 JSON_PATH_ENV = "BENCH_SERVE_JSON"
 DEFAULT_JSON_PATH = "BENCH_serve.json"
+METRICS_PATH_ENV = "METRICS_SERVE_JSON"
+DEFAULT_METRICS_PATH = "METRICS_serve.json"
 
 P = 3
 TICK_SWEEP = (64, 256, 1024)
@@ -68,8 +75,21 @@ def _write_json(results: list[dict], mode: str) -> str:
     return path
 
 
+def _write_metrics(cells: dict, mode: str) -> str:
+    """One ``MetricRegistry.snapshot()`` per timed grid cell — the
+    observability artifact next to the timing rows.  CI schema-checks
+    it (``tools/check_metrics.py``): every cell must carry the TTD
+    histogram, the recirc-overhead gauge, and the dispatch counter."""
+    path = os.environ.get(METRICS_PATH_ENV, DEFAULT_METRICS_PATH)
+    with open(path, "w") as f:
+        json.dump({"bench": "serve", "mode": mode, "cells": cells}, f,
+                  indent=2)
+        f.write("\n")
+    return path
+
+
 def _replay(make_server, stream, tick: int):
-    """Replay the stream; return (seconds, verdict latencies, stats)."""
+    """Replay the stream; return (seconds, verdict latencies, server)."""
     srv = make_server()
     lat: list[float] = []
     t_total = 0.0
@@ -84,7 +104,7 @@ def _replay(make_server, stream, tick: int):
     dt = time.perf_counter() - t0
     t_total += dt
     lat.extend([dt] * v.n_flows)
-    return t_total, np.asarray(lat), srv.stats
+    return t_total, np.asarray(lat), srv
 
 
 def run(quick: bool = True, smoke: bool = False):
@@ -105,6 +125,7 @@ def run(quick: bool = True, smoke: bool = False):
 
     rows: list[Row] = []
     results: list[dict] = []
+    metrics_cells: dict[str, dict] = {}
     impls = ("fused", "pallas")
     # grid: fused tick engine sweeps tick sizes; the legacy engine runs
     # at the base tick only (it is the baseline, not the product)
@@ -129,7 +150,8 @@ def run(quick: bool = True, smoke: bool = False):
                 # visits the deep rank chains late in the stream
                 _replay(make_server, stream, tick)
 
-                secs, lat, stats = _replay(make_server, stream, tick)
+                secs, lat, srv = _replay(make_server, stream, tick)
+                stats = srv.stats
                 secs_at[(profile, impl, tick, tick_engine)] = secs
                 pkts_s = stats.packets / secs if secs > 0 else float("inf")
                 p50 = float(np.percentile(lat, 50) * 1e3)
@@ -140,6 +162,7 @@ def run(quick: bool = True, smoke: bool = False):
                            if tick_engine == "fused" and legacy and secs > 0
                            else None)
                 name = f"serve/{profile}/{impl}/{tick_engine}/t{tick}"
+                metrics_cells[name] = srv.registry.snapshot()
                 rows.append(Row(
                     name, secs / max(stats.verdicts, 1) * 1e6,
                     f"pkts_per_s={pkts_s:.0f};p50_ms={p50:.2f};"
@@ -172,9 +195,12 @@ def run(quick: bool = True, smoke: bool = False):
         if legacy and fused:
             r["speedup_vs_legacy"] = round(legacy / fused, 2)
 
-    path = _write_json(results, "smoke" if smoke else
-                       ("quick" if quick else "full"))
+    mode = "smoke" if smoke else ("quick" if quick else "full")
+    path = _write_json(results, mode)
     rows.append(Row("serve/json", 0.0, f"path={path};rows={len(results)}"))
+    mpath = _write_metrics(metrics_cells, mode)
+    rows.append(Row("serve/metrics", 0.0,
+                    f"path={mpath};cells={len(metrics_cells)}"))
     return rows
 
 

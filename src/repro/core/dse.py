@@ -19,10 +19,12 @@ feasibility; sweeping flow targets yields the Pareto frontier
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.core.partition import train_partitioned_dt
 from repro.core.recirc import ENVIRONMENTS, recirc_bandwidth
 from repro.core.resources import Target, TOFINO1, estimate
@@ -311,10 +313,29 @@ def bayes_search(
 
     def run_batch(cfgs: list[Config]):
         seen.update(cfgs)
-        if evaluate_batch is not None:
-            history.extend(evaluate_batch(cfgs))
-        else:
-            history.extend(evaluate(c) for c in cfgs)
+        reg_obs = obs.get_registry()
+        t0 = time.perf_counter() if obs.enabled() else 0.0
+        with obs.span("dse/round"):
+            if evaluate_batch is not None:
+                fresh = evaluate_batch(cfgs)
+            else:
+                fresh = [evaluate(c) for c in cfgs]
+        history.extend(fresh)
+        reg_obs.counter("dse_evals_total",
+                        "candidate configs evaluated").inc(len(fresh))
+        reg_obs.counter(
+            "dse_feasible_total", "evaluations meeting resource bounds",
+        ).inc(sum(1 for e in fresh if e.feasible))
+        if obs.enabled() and fresh:
+            dt = time.perf_counter() - t0
+            reg_obs.histogram(
+                "dse_round_seconds", "wall-clock per BO candidate round",
+                edges=obs.exp_edges(1e-3, 1e3, 13)).record(dt)
+            if dt > 0:
+                reg_obs.gauge(
+                    "dse_candidates_per_s",
+                    "throughput of the latest candidate round",
+                ).set(len(fresh) / dt)
 
     run_batch(pick_fresh([space.sample(rng) for _ in range(n_init)], n_init))
 

@@ -64,6 +64,7 @@ from repro.core.partition import PartitionedDT
 from repro.core.range_tables import RangeExecTables, pack_range_exec
 from repro.core.tables import PackedTables, pack_tables
 from repro.kernels import compaction, ops
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -359,6 +360,33 @@ class ExecutionBackend(Protocol):
             ) -> EngineResult: ...
 
 
+def _record_walk(exit_p: np.ndarray, P: int, *, compact: bool,
+                 compact_floor: int) -> None:
+    """Per-hop survivor counts — and, when compacting, the capacity
+    bucket each hop padded its survivors to — derived HOST-side from
+    the already-fetched exit partitions.  A flow exiting at partition
+    ``e`` is live for hops ``0..e``, so the survivor count entering
+    hop ``p`` is ``B - |{exits < p}|``; no extra device work or syncs.
+    """
+    reg = obs.get_registry()
+    B = int(exit_p.shape[0])
+    exits = np.bincount(exit_p[exit_p >= 0], minlength=P)
+    survivors = B - np.concatenate(([0], np.cumsum(exits)[:P - 1]))
+    caps = compaction.bucket_caps(B, compact_floor) if compact else None
+    for p in range(P):
+        s = int(survivors[p])
+        reg.counter(
+            "engine_hop_survivors_total",
+            "flows still walking when each hop starts",
+            labels={"hop": str(p)}).inc(s)
+        if caps is not None:
+            cap = next(c for c in caps if c >= s)
+            reg.counter(
+                "engine_compact_bucket_total",
+                "capacity-ladder bucket the hop's survivors padded to",
+                labels={"hop": str(p), "cap": str(cap)}).inc()
+
+
 @dataclasses.dataclass(frozen=True)
 class WalkBackend:
     """Fully-jitted walk: ONE device→host transfer per batch.
@@ -374,13 +402,21 @@ class WalkBackend:
             with_trace: bool = True, compact: bool = False,
             compact_floor: int = compaction.COMPACT_FLOOR) -> EngineResult:
         P = engine._check_windows(win_pkts)
-        labels, recircs, exit_p, regs = partition_walk(
-            jnp.asarray(win_pkts[:, :P]), engine.dev,
-            n_subtrees=engine.ret.n_subtrees, with_trace=with_trace,
-            step=self.step, compact=compact, compact_floor=compact_floor)
-        # ONE device->host transfer for the whole batch
-        labels, recircs, exit_p, regs = jax.device_get(
-            (labels, recircs, exit_p, regs))
+        with obs.span("engine/dispatch"):
+            labels, recircs, exit_p, regs = partition_walk(
+                jnp.asarray(win_pkts[:, :P]), engine.dev,
+                n_subtrees=engine.ret.n_subtrees, with_trace=with_trace,
+                step=self.step, compact=compact,
+                compact_floor=compact_floor)
+            obs.get_registry().counter(
+                "engine_dispatches_total", "jitted walk calls issued",
+                labels={"backend": self.name}).inc()
+        with obs.span("engine/fetch"):
+            # ONE device->host transfer for the whole batch
+            labels, recircs, exit_p, regs = jax.device_get(
+                (labels, recircs, exit_p, regs))
+        _record_walk(np.asarray(exit_p), P, compact=compact,
+                     compact_floor=compact_floor)
         trace = [] if regs is None else [regs[p] for p in range(P)]
         return EngineResult(labels, recircs, exit_p, trace)
 
@@ -427,7 +463,12 @@ class LoopedBackend:
         exit_partition = np.full(B, -1, dtype=np.int32)
         regs_trace: list[np.ndarray] = []
 
+        reg_obs = obs.get_registry()
         for p in range(P):
+            reg_obs.counter(
+                "engine_hop_survivors_total",
+                "flows still walking when each hop starts",
+                labels={"hop": str(p)}).inc(int(B - done.sum()))
             # host-side early-exit compaction: the looped analogue of the
             # walk backends' capacity buckets is plain fancy indexing
             rows = np.nonzero(~done)[0] if compact and p else np.arange(B)
@@ -440,6 +481,10 @@ class LoopedBackend:
                                             impl=impl)
                 action_d = ops.dt_traverse(regs_d, sid_d, engine.ret,
                                            impl=impl)
+                reg_obs.counter(
+                    "engine_dispatches_total",
+                    "jitted walk calls issued",
+                    labels={"backend": "looped"}).inc(2)
                 if with_trace:
                     regs_h, action_h = jax.device_get((regs_d, action_d))
                 else:

@@ -19,9 +19,11 @@ as one vmapped dispatch (``repro.fit``).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import tree as tree_lib
 from repro.core.features import max_dep_depth
 from repro.core.tree import Tree, train_tree
@@ -199,18 +201,31 @@ def train_partitioned_dt(
         depth = int(partition_sizes[partition])
         fleet_X = [X_windows[rows, partition, :] for rows, _, _ in frontier]
         fleet_y = [y[rows] for rows, _, _ in frontier]
-        if trainer == "jax":
-            from repro.fit import train_forest
-            trees = train_forest(
-                fleet_X, fleet_y, max_depth=depth, k_features=k,
-                n_classes=C, min_samples_leaf=min_samples_leaf,
-                max_bins=max_bins, allowed_features=allowed)
-        else:
-            trees = [train_tree(Xs, ys, max_depth=depth, k_features=k,
-                                n_classes=C,
-                                min_samples_leaf=min_samples_leaf,
-                                max_bins=max_bins, allowed_features=allowed)
-                     for Xs, ys in zip(fleet_X, fleet_y)]
+        grow_t0 = time.perf_counter() if obs.enabled() else 0.0
+        with obs.span("fit/level"):
+            if trainer == "jax":
+                from repro.fit import train_forest
+                trees = train_forest(
+                    fleet_X, fleet_y, max_depth=depth, k_features=k,
+                    n_classes=C, min_samples_leaf=min_samples_leaf,
+                    max_bins=max_bins, allowed_features=allowed)
+            else:
+                trees = [train_tree(Xs, ys, max_depth=depth, k_features=k,
+                                    n_classes=C,
+                                    min_samples_leaf=min_samples_leaf,
+                                    max_bins=max_bins,
+                                    allowed_features=allowed)
+                         for Xs, ys in zip(fleet_X, fleet_y)]
+        reg_obs = obs.get_registry()
+        reg_obs.counter("fit_trees_total", "subtrees grown",
+                        labels={"trainer": trainer}).inc(len(trees))
+        if obs.enabled():
+            reg_obs.histogram(
+                "fit_level_seconds",
+                "wall-clock per-partition subtree-fleet grow time",
+                edges=obs.exp_edges(1e-4, 100.0, 13),
+                labels={"trainer": trainer},
+            ).record(time.perf_counter() - grow_t0)
 
         next_frontier: list[tuple[np.ndarray, int, int]] = []
         last = partition + 1 >= p

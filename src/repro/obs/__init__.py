@@ -1,0 +1,52 @@
+"""Line-rate telemetry for the serving stack.
+
+Three pieces (see ``docs/OBSERVABILITY.md`` for the metric catalogue):
+
+* :mod:`repro.obs.metrics` — process-local :class:`MetricRegistry`
+  with counters, gauges, and fixed-bucket histograms; Prometheus-text
+  and JSON exposition.
+* :mod:`repro.obs.trace` — nestable wall-clock :func:`span` hooks that
+  double as ``jax.profiler.TraceAnnotation`` markers; globally
+  disabled with ``SPLIDT_OBS=0``.
+* :mod:`repro.obs.reporter` — :class:`MetricsReporter`, a periodic
+  JSONL dumper with an optional ``http.server`` scrape endpoint.
+
+Counters and gauges always record (they back ``ServerStats`` and the
+parity tests); only wall-clock timing — spans and latency-histogram
+fills — honours the ``SPLIDT_OBS`` switch.
+"""
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricRegistry,
+    exp_edges,
+    get_registry,
+    set_registry,
+)
+from .reporter import MetricsReporter
+from .trace import (
+    SpanNode,
+    enabled,
+    reset_spans,
+    set_enabled,
+    span,
+    span_tree,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "MetricsReporter",
+    "SpanNode",
+    "enabled",
+    "exp_edges",
+    "get_registry",
+    "reset_spans",
+    "set_enabled",
+    "set_registry",
+    "span",
+    "span_tree",
+]

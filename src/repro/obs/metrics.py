@@ -1,0 +1,326 @@
+"""Process-local metrics: counters, gauges, fixed-bucket histograms.
+
+The registry is the single source of runtime truth for the serving
+stack — ``ServerStats`` is a thin view over it, the benchmarks dump
+snapshots of it, and the reporter exposes it.  Design constraints, in
+order:
+
+* **O(1) record path.**  ``Counter.inc`` is two dict-free attribute
+  ops; ``Histogram.record_many`` is one ``np.searchsorted`` plus one
+  ``np.add.at`` regardless of sample count.  Nothing on the hot path
+  allocates per-sample Python objects.
+* **Lock-free single-writer.**  One thread (the serving loop) writes;
+  readers (``MetricsReporter``, a scrape endpoint) only ever see a
+  consistent-enough view because every cell is either a Python int
+  (atomic under the GIL) or a numpy buffer that is copied on
+  ``snapshot()``.  There are deliberately no locks to contend on.
+* **Replayable.**  A snapshot is plain ``dict``/``list``/``float``
+  data, so two runs over the same ``PacketStream`` can be compared
+  key-by-key (the live-parity tests do exactly that).
+
+>>> reg = MetricRegistry()
+>>> c = reg.counter("serve_packets_total", "packets ingested")
+>>> c.inc(128)
+>>> reg.counter("serve_packets_total").value
+128
+>>> h = reg.histogram("serve_ttd_seconds", "arrival->verdict latency",
+...                   edges=[0.001, 0.01, 0.1, 1.0])
+>>> h.record_many([0.0005, 0.05, 0.05, 2.0])
+>>> [int(c) for c in h.counts]
+[1, 0, 2, 0, 1]
+>>> h.quantile(0.5) <= 0.1
+True
+>>> snap = reg.snapshot()
+>>> snap["counters"]["serve_packets_total"]["value"]
+128
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricRegistry",
+    "exp_edges",
+    "get_registry",
+    "set_registry",
+]
+
+
+def _label_key(labels: Optional[Mapping[str, str]]) -> Tuple[Tuple[str, str], ...]:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_suffix(key: Tuple[Tuple[str, str], ...]) -> str:
+    if not key:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    return "{%s}" % inner
+
+
+def exp_edges(lo: float, hi: float, n: int) -> List[float]:
+    """``n`` exponentially spaced bucket edges from ``lo`` to ``hi``."""
+    if not (lo > 0 and hi > lo and n >= 2):
+        raise ValueError("need 0 < lo < hi and n >= 2")
+    ratio = (hi / lo) ** (1.0 / (n - 1))
+    return [lo * ratio ** i for i in range(n)]
+
+
+class Counter:
+    """Monotonic int counter.  ``inc`` only; never decreases."""
+
+    __slots__ = ("name", "help", "labels", "value")
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Optional[Mapping[str, str]] = None):
+        self.name = name
+        self.help = help
+        self.labels = _label_key(labels)
+        self.value = 0
+
+    def inc(self, by: int = 1) -> None:
+        if by < 0:
+            raise ValueError("counters only go up")
+        self.value += by
+
+
+class Gauge:
+    """A settable float — last write wins."""
+
+    __slots__ = ("name", "help", "labels", "value")
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Optional[Mapping[str, str]] = None):
+        self.name = name
+        self.help = help
+        self.labels = _label_key(labels)
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def add(self, by: float) -> None:
+        self.value += float(by)
+
+
+class Histogram:
+    """Fixed-bucket histogram over ``edges`` (sorted, ascending).
+
+    ``counts`` has ``len(edges) + 1`` cells: cell ``i`` holds the
+    samples ``x`` with ``edges[i-1] <= x < edges[i]`` (numpy
+    ``searchsorted(side="right")``), the last cell is the +Inf
+    overflow.  Bucketing is vectorised; a million samples cost one
+    searchsorted + one scatter-add.
+    """
+
+    __slots__ = ("name", "help", "labels", "edges", "counts",
+                 "total", "sum")
+
+    def __init__(self, name: str, help: str = "",
+                 edges: Sequence[float] = (),
+                 labels: Optional[Mapping[str, str]] = None):
+        e = np.asarray(list(edges), dtype=np.float64)
+        if e.ndim != 1 or e.size < 1 or np.any(np.diff(e) <= 0):
+            raise ValueError("edges must be a non-empty ascending 1-d "
+                             "sequence")
+        self.name = name
+        self.help = help
+        self.labels = _label_key(labels)
+        self.edges = e
+        self.counts = np.zeros(e.size + 1, dtype=np.int64)
+        self.total = 0
+        self.sum = 0.0
+
+    def record(self, value: float) -> None:
+        i = int(np.searchsorted(self.edges, value, side="right"))
+        self.counts[i] += 1
+        self.total += 1
+        self.sum += float(value)
+
+    def record_many(self, values) -> None:
+        v = np.asarray(values, dtype=np.float64).ravel()
+        if v.size == 0:
+            return
+        idx = np.searchsorted(self.edges, v, side="right")
+        np.add.at(self.counts, idx, 1)
+        self.total += int(v.size)
+        self.sum += float(v.sum())
+
+    def quantile(self, q: float) -> float:
+        """Upper bucket edge containing the ``q`` quantile (the usual
+        Prometheus-style conservative estimate); NaN when empty."""
+        if not (0.0 <= q <= 1.0):
+            raise ValueError("q must be in [0, 1]")
+        if self.total == 0:
+            return float("nan")
+        target = q * self.total
+        cum = np.cumsum(self.counts)
+        i = int(np.searchsorted(cum, target, side="left"))
+        if i >= self.edges.size:
+            return float("inf")
+        return float(self.edges[i])
+
+    def bucket_of(self, value: float) -> int:
+        """Index of the bucket a sample would land in."""
+        return int(np.searchsorted(self.edges, value, side="right"))
+
+
+class MetricRegistry:
+    """Name → metric map with get-or-create accessors.
+
+    Metric identity is ``(name, sorted(labels))``; re-asking for the
+    same identity returns the same live object, so call sites never
+    cache metric handles unless they are hot.
+    """
+
+    def __init__(self):
+        self._counters: Dict[Tuple, Counter] = {}
+        self._gauges: Dict[Tuple, Gauge] = {}
+        self._histograms: Dict[Tuple, Histogram] = {}
+
+    # -- get-or-create -----------------------------------------------------
+    def counter(self, name: str, help: str = "",
+                labels: Optional[Mapping[str, str]] = None) -> Counter:
+        key = (name, _label_key(labels))
+        m = self._counters.get(key)
+        if m is None:
+            m = self._counters[key] = Counter(name, help, labels)
+        return m
+
+    def gauge(self, name: str, help: str = "",
+              labels: Optional[Mapping[str, str]] = None) -> Gauge:
+        key = (name, _label_key(labels))
+        m = self._gauges.get(key)
+        if m is None:
+            m = self._gauges[key] = Gauge(name, help, labels)
+        return m
+
+    def histogram(self, name: str, help: str = "",
+                  edges: Sequence[float] = (),
+                  labels: Optional[Mapping[str, str]] = None) -> Histogram:
+        key = (name, _label_key(labels))
+        m = self._histograms.get(key)
+        if m is None:
+            if not edges:
+                raise ValueError(
+                    f"first use of histogram {name!r} must pass edges")
+            m = self._histograms[key] = Histogram(name, help, edges, labels)
+        return m
+
+    # -- views -------------------------------------------------------------
+    def snapshot(self) -> Dict[str, dict]:
+        """Plain-data copy of every metric (safe to mutate / serialise)."""
+        counters = {}
+        for (name, lk), c in sorted(self._counters.items()):
+            counters[name + _label_suffix(lk)] = {
+                "value": c.value, "help": c.help}
+        gauges = {}
+        for (name, lk), g in sorted(self._gauges.items()):
+            gauges[name + _label_suffix(lk)] = {
+                "value": g.value, "help": g.help}
+        histograms = {}
+        for (name, lk), h in sorted(self._histograms.items()):
+            histograms[name + _label_suffix(lk)] = {
+                "edges": [float(e) for e in h.edges],
+                "counts": [int(c) for c in h.counts],
+                "total": h.total,
+                "sum": h.sum,
+                "help": h.help,
+            }
+        return {"counters": counters, "gauges": gauges,
+                "histograms": histograms}
+
+    @staticmethod
+    def delta(before: Mapping[str, dict],
+              after: Mapping[str, dict]) -> Dict[str, dict]:
+        """Snapshot-vs-snapshot difference (counters + histogram counts;
+        gauges report the *after* value)."""
+        out: Dict[str, dict] = {"counters": {}, "gauges": {},
+                                "histograms": {}}
+        for k, v in after.get("counters", {}).items():
+            prev = before.get("counters", {}).get(k, {}).get("value", 0)
+            out["counters"][k] = {"value": v["value"] - prev}
+        for k, v in after.get("gauges", {}).items():
+            out["gauges"][k] = {"value": v["value"]}
+        for k, v in after.get("histograms", {}).items():
+            prev = before.get("histograms", {}).get(k)
+            pc = prev["counts"] if prev else [0] * len(v["counts"])
+            out["histograms"][k] = {
+                "edges": v["edges"],
+                "counts": [a - b for a, b in zip(v["counts"], pc)],
+                "total": v["total"] - (prev["total"] if prev else 0),
+                "sum": v["sum"] - (prev["sum"] if prev else 0.0),
+            }
+        return out
+
+    # -- exposition --------------------------------------------------------
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (v0.0.4) of the whole registry."""
+        lines: List[str] = []
+        for (name, lk), c in sorted(self._counters.items()):
+            if c.help and not lk:
+                lines.append(f"# HELP {name} {c.help}")
+            if not lk:
+                lines.append(f"# TYPE {name} counter")
+            lines.append(f"{name}{_label_suffix(lk)} {c.value}")
+        for (name, lk), g in sorted(self._gauges.items()):
+            if g.help and not lk:
+                lines.append(f"# HELP {name} {g.help}")
+            if not lk:
+                lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name}{_label_suffix(lk)} {_fmt(g.value)}")
+        for (name, lk), h in sorted(self._histograms.items()):
+            if h.help and not lk:
+                lines.append(f"# HELP {name} {h.help}")
+            if not lk:
+                lines.append(f"# TYPE {name} histogram")
+            cum = 0
+            base = dict(lk)
+            for edge, cnt in zip(h.edges, h.counts[:-1]):
+                cum += int(cnt)
+                le = _label_suffix(_label_key({**base, "le": _fmt(edge)}))
+                lines.append(f"{name}_bucket{le} {cum}")
+            cum += int(h.counts[-1])
+            le = _label_suffix(_label_key({**base, "le": "+Inf"}))
+            lines.append(f"{name}_bucket{le} {cum}")
+            lines.append(f"{name}_sum{_label_suffix(lk)} {_fmt(h.sum)}")
+            lines.append(f"{name}_count{_label_suffix(lk)} {h.total}")
+        return "\n".join(lines) + "\n"
+
+
+def _fmt(x: float) -> str:
+    if math.isinf(x):
+        return "+Inf" if x > 0 else "-Inf"
+    if float(x) == int(x) and abs(x) < 1e15:
+        return str(int(x))
+    return repr(float(x))
+
+
+# -- process-global default registry ---------------------------------------
+# Engine / fit / dse / tuning instrumentation records here; a
+# FlowTableServer gets its own registry by default (pass ``registry=``
+# to share).  ``set_registry`` swaps the global for tests/benchmarks.
+_DEFAULT = MetricRegistry()
+
+
+def get_registry() -> MetricRegistry:
+    return _DEFAULT
+
+
+def set_registry(reg: MetricRegistry) -> MetricRegistry:
+    """Install ``reg`` as the process default; returns the previous one."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = reg
+    return prev

@@ -76,10 +76,19 @@ from repro.kernels import tick_step as _tick
 from repro.kernels.dispatch import dispatch_dt_traverse
 from repro.kernels.dt_traverse import BLOCK_B
 from repro.kernels.feature_window import feature_update_at
+from repro.obs import MetricRegistry, exp_edges, span
 
 #: Tick-engine modes ``FlowTableServer`` accepts ("auto" resolves via
 #: the tick-shape cost estimate in ``repro.tuning``).
 TICK_ENGINES = ("auto", "fused", "legacy")
+
+#: Histogram bucket edges (docs/OBSERVABILITY.md catalogues the
+#: metrics).  TTD is measured in STREAM time — the packet arrival
+#: clock of the replayed ``PacketStream`` — so two replays of the same
+#: stream land every verdict in the same bucket, deterministically.
+TTD_EDGES = tuple(exp_edges(1e-3, 1e4, 15))
+RECIRC_EDGES = (0.5, 1.5, 2.5, 4.5, 8.5, 16.5, 32.5)
+WINDOW_EDGES = (1.5, 2.5, 3.5, 4.5, 6.5, 8.5, 12.5, 16.5)
 
 
 # ---------------------------------------------------------------------------
@@ -146,20 +155,30 @@ class _VerdictAccum:
         self._chunks: list[tuple] = []
         self.n = 0
 
-    def add(self, fid, label, rec, exitp) -> None:
+    def add(self, fid, label, rec, exitp, first_ts: float = np.inf) -> None:
         self.add_batch(np.asarray([fid], np.int64),
                        np.asarray([label], np.int32),
                        np.asarray([rec], np.int32),
-                       np.asarray([exitp], np.int32))
+                       np.asarray([exitp], np.int32),
+                       np.asarray([first_ts], np.float64))
 
-    def add_batch(self, fids, labels, recs, exitps) -> None:
+    def add_batch(self, fids, labels, recs, exitps, first_ts=None) -> None:
         fids = np.asarray(fids, np.int64)
         if not fids.size:
             return
+        if first_ts is None:
+            first_ts = np.full(fids.size, np.inf, np.float64)
         self._chunks.append((fids, np.asarray(labels, np.int32),
                              np.asarray(recs, np.int32),
-                             np.asarray(exitps, np.int32)))
+                             np.asarray(exitps, np.int32),
+                             np.asarray(first_ts, np.float64)))
         self.n += int(fids.size)
+
+    def first_ts(self) -> np.ndarray:
+        """First-packet arrival per accumulated verdict (TTD input)."""
+        if not self._chunks:
+            return np.empty(0, np.float64)
+        return np.concatenate([c[4] for c in self._chunks])
 
     def build(self, plan) -> StreamVerdicts:
         fid = np.empty(self.n, np.int64)
@@ -167,7 +186,7 @@ class _VerdictAccum:
         rec = np.empty(self.n, np.int32)
         exp = np.empty(self.n, np.int32)
         at = 0
-        for f, l, r, e in self._chunks:
+        for f, l, r, e, _ in self._chunks:
             fid[at:at + f.size] = f
             lab[at:at + f.size] = l
             rec[at:at + f.size] = r
@@ -276,18 +295,75 @@ class _SpillFlow:
     length: int
     rows: list = dataclasses.field(default_factory=list)
     last_ts: float = -np.inf
+    first_ts: float = np.inf
 
 
-@dataclasses.dataclass
+def _counter_stat(metric: str, doc: str) -> property:
+    """A ServerStats field backed by a registry counter.
+
+    The setter only accepts the ``stats.field += n`` idiom (counters
+    are monotonic), which is the only way the server writes them.
+    """
+    def _get(self):
+        return self.registry.counter(metric, doc).value
+
+    def _set(self, value):
+        c = self.registry.counter(metric, doc)
+        c.inc(int(value) - c.value)
+
+    return property(_get, _set, doc=doc)
+
+
 class ServerStats:
-    packets: int = 0             # packets ingested (resident + spilled)
-    flows_seen: int = 0          # distinct flows admitted or spilled
-    verdicts: int = 0            # verdicts emitted (incl. sentinels)
-    spilled: int = 0             # flows that fell back to the host store
-    evicted: int = 0             # timeout evictions (mid-stream sentinels)
-    peak_resident: int = 0       # max concurrent flows (slots + spill)
-    ticks: int = 0               # ingest calls served
-    dispatches: int = 0          # jitted device calls issued (not syncs)
+    """Live integer counters for one server — a thin view.
+
+    Since the obs PR the numbers live in the server's
+    :class:`repro.obs.MetricRegistry` (``serve_*`` metrics); this
+    class keeps the historical eight-field attribute API
+    (``srv.stats.dispatches`` etc.) as properties over the registry,
+    so stats appear in Prometheus/JSONL exposition for free.
+    ``ServerStats()`` with no argument gets a private registry —
+    the pre-PR standalone behaviour.
+    """
+
+    FIELDS = ("packets", "flows_seen", "verdicts", "spilled", "evicted",
+              "peak_resident", "ticks", "dispatches")
+
+    def __init__(self, registry: MetricRegistry | None = None):
+        self.registry = registry if registry is not None else MetricRegistry()
+
+    packets = _counter_stat(
+        "serve_packets_total", "packets ingested (resident + spilled)")
+    flows_seen = _counter_stat(
+        "serve_flows_total", "distinct flows admitted or spilled")
+    verdicts = _counter_stat(
+        "serve_verdicts_total", "verdicts emitted (incl. sentinels)")
+    spilled = _counter_stat(
+        "serve_spilled_total", "flows that fell back to the host store")
+    evicted = _counter_stat(
+        "serve_evicted_total", "timeout evictions (mid-stream sentinels)")
+    ticks = _counter_stat(
+        "serve_ticks_total", "ingest calls served")
+    dispatches = _counter_stat(
+        "serve_dispatches_total", "jitted device calls issued (not syncs)")
+
+    @property
+    def peak_resident(self):
+        """Max concurrent flows (slots + spill)."""
+        return int(self.registry.gauge("serve_peak_resident").value)
+
+    @peak_resident.setter
+    def peak_resident(self, value):
+        self.registry.gauge(
+            "serve_peak_resident",
+            "max concurrent flows (slots + spill)").set(value)
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in self.FIELDS}
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}={v}" for k, v in self.as_dict().items())
+        return f"ServerStats({inner})"
 
 
 # ---------------------------------------------------------------------------
@@ -438,7 +514,8 @@ class FlowTableServer:
     def __init__(self, engine: Engine, *, n_buckets: int = 64,
                  bucket_size: int = 8, timeout: float | None = None,
                  options: EngineOptions | None = None,
-                 rank_floor: int = 64, tick_engine: str = "auto"):
+                 rank_floor: int = 64, tick_engine: str = "auto",
+                 registry: MetricRegistry | None = None):
         self.engine = engine
         self.options = options or EngineOptions()
         self.timeout = timeout
@@ -466,7 +543,33 @@ class FlowTableServer:
 
         N = self.table.capacity
         self._dummy = N                       # padding scatters land here
-        self.stats = ServerStats()
+        # each server gets a private registry unless the caller shares
+        # one; ServerStats is a view over it (serve_* counters/gauge)
+        self.registry = registry if registry is not None else MetricRegistry()
+        self.stats = ServerStats(self.registry)
+        self._m_ttd = self.registry.histogram(
+            "serve_ttd_seconds",
+            "stream-time packet-arrival -> verdict latency (TTD)",
+            edges=TTD_EDGES)
+        self._m_recirc_hist = self.registry.histogram(
+            "serve_recircs_per_flow",
+            "recirculations accumulated per emitted verdict",
+            edges=RECIRC_EDGES)
+        self._m_windows = self.registry.histogram(
+            "serve_windows_per_verdict",
+            "partition windows visited per verdict (recircs + 1)",
+            edges=WINDOW_EDGES)
+        self._m_recircs = self.registry.counter(
+            "serve_recircs_total",
+            "recirculations summed over emitted verdicts")
+        self._m_overhead = self.registry.gauge(
+            "serve_recirc_overhead",
+            "recirculations per ingested packet (paper bar: < 0.0005)")
+        self._m_resident = self.registry.gauge(
+            "serve_resident_flows",
+            "concurrent flows currently held (slots + host spill)")
+        self._now = -np.inf                   # stream clock: max arrival seen
+        self._first_ts = np.full(N, np.inf, np.float64)
         self._last_ts = np.full(N, -np.inf, np.float64)
         self._recircs = np.zeros(N, np.int32)
         self._spill: dict[int, _SpillFlow] = {}
@@ -541,6 +644,7 @@ class FlowTableServer:
         slots = np.asarray(slots, np.int64)
         lengths = np.maximum(np.asarray(lengths, np.int64), 1)
         self._last_ts[slots] = -np.inf
+        self._first_ts[slots] = np.inf        # new tenant: fresh TTD clock
         if self.tick_engine == "fused":
             cap, padded = self._pad_slots(slots)
             plen = np.ones(cap, np.int32)
@@ -577,10 +681,14 @@ class FlowTableServer:
         n = int(fid.shape[0])
         self.stats.packets += n
         self.stats.ticks += 1
+        if n:
+            self._now = max(self._now, float(arr.max()))
         out = _VerdictAccum()
 
         # route every packet: resident slot, spill store, or retired-drop
-        slot_pk = self._route_tick(fid, flen) if n else np.empty(0, np.int64)
+        with span("tick/admit"):
+            slot_pk = (self._route_tick(fid, flen) if n
+                       else np.empty(0, np.int64))
         self.stats.peak_resident = max(self.stats.peak_resident,
                                        self.resident_flows)
 
@@ -588,7 +696,9 @@ class FlowTableServer:
         for i in spill_rows:
             f = self._spill[int(fid[i])]
             f.rows.append(pk[i])
-            f.last_ts = max(f.last_ts, float(arr[i]))
+            ts = float(arr[i])
+            f.last_ts = max(f.last_ts, ts)
+            f.first_ts = min(f.first_ts, ts)
 
         res_rows = np.nonzero(slot_pk >= 0)[0]
         if res_rows.size:
@@ -598,7 +708,7 @@ class FlowTableServer:
         if self.timeout is not None and n:
             self._evict_timeouts(float(arr.max()), out)
         self.stats.verdicts += out.n
-        return out.build(self._plan)
+        return self._finish(out)
 
     def flush(self) -> StreamVerdicts:
         """End of stream: evict every resident flow with sentinels."""
@@ -608,15 +718,37 @@ class FlowTableServer:
         if live.size:
             neg = np.full(live.size, -1, np.int32)
             out.add_batch(self.table.key[live], neg,
-                          self._recircs[live], neg)
+                          self._recircs[live], neg, self._first_ts[live])
             for slot in live:
                 self._evict(int(slot))
         for key in list(self._spill):
-            out.add(key, -1, 0, -1)
+            out.add(key, -1, 0, -1, self._spill[key].first_ts)
             del self._spill[key]
             self._retired.add(key)
         self.stats.verdicts += out.n
-        return out.build(self._plan)
+        return self._finish(out)
+
+    def _finish(self, out: _VerdictAccum) -> StreamVerdicts:
+        """Build the tick's verdicts and fold them into the registry.
+
+        Everything here is derived from the verdicts themselves plus
+        the stream clock, so it is deterministic across replays and
+        across tick engines — the live-parity tests recompute each
+        value offline from the raw :class:`StreamVerdicts`.
+        """
+        v = out.build(self._plan)
+        if v.n_flows:
+            rec = np.asarray(v.recircs, np.int64)
+            self._m_recircs.inc(int(rec.sum()))
+            self._m_recirc_hist.record_many(rec)
+            self._m_windows.record_many(rec + 1)
+            ttd = np.float64(self._now) - out.first_ts()
+            self._m_ttd.record_many(ttd[np.isfinite(ttd)])
+        pkts = self.stats.packets
+        self._m_overhead.set(
+            self._m_recircs.value / pkts if pkts else 0.0)
+        self._m_resident.set(self.resident_flows)
+        return v
 
     # -- device plumbing ------------------------------------------------
     def _pad_slots(self, s: np.ndarray) -> tuple[int, np.ndarray]:
@@ -650,6 +782,7 @@ class FlowTableServer:
         return order, ss, grp_id, rank
 
     def _process_resident(self, slots, fids, pkts, arr, out) -> None:
+        np.minimum.at(self._first_ts, slots, arr)
         np.maximum.at(self._last_ts, slots, arr)
         if self.tick_engine == "fused":
             self._process_resident_fused(slots, pkts, out)
@@ -666,24 +799,28 @@ class FlowTableServer:
         retired-flow guard, IAT window reset, fold, completion hop, and
         empty-window drain all run inside ``kernels.tick_step``.
         """
-        order, ss, grp_id, rank = self._rank_decompose(slots)
-        R = _pow2_cap(int(rank.max()) + 1, 1)
-        C = _pow2_cap(int(grp_id[-1]) + 1, self._rank_floor)
-        slots_rc = np.full((R, C), self._dummy, np.int32)
-        pkt_rc = np.zeros((R, C, PKT_NFIELDS), np.float32)
-        slots_rc[rank, grp_id] = ss
-        pkt_rc[rank, grp_id] = pkts[order]
-        self._tstate, res = _tick.tick_step(
-            self._tstate, jnp.asarray(slots_rc), jnp.asarray(pkt_rc),
-            self.engine.dev, n_subtrees=self.S,
-            pallas=self._pallas, block_b=self._block_b)
-        self.stats.dispatches += 1
-        vm, vl, vr, ve, rec = (np.asarray(a) for a in jax.device_get(res))
+        with span("tick/pack"):
+            order, ss, grp_id, rank = self._rank_decompose(slots)
+            R = _pow2_cap(int(rank.max()) + 1, 1)
+            C = _pow2_cap(int(grp_id[-1]) + 1, self._rank_floor)
+            slots_rc = np.full((R, C), self._dummy, np.int32)
+            pkt_rc = np.zeros((R, C, PKT_NFIELDS), np.float32)
+            slots_rc[rank, grp_id] = ss
+            pkt_rc[rank, grp_id] = pkts[order]
+        with span("tick/dispatch"):
+            self._tstate, res = _tick.tick_step(
+                self._tstate, jnp.asarray(slots_rc), jnp.asarray(pkt_rc),
+                self.engine.dev, n_subtrees=self.S,
+                pallas=self._pallas, block_b=self._block_b)
+            self.stats.dispatches += 1
+        with span("tick/fetch"):
+            vm, vl, vr, ve, rec = (
+                np.asarray(a) for a in jax.device_get(res))
         self._recircs = rec                   # host mirror (flush/timeout)
         done = np.nonzero(vm)[0]
         if done.size:
             out.add_batch(self.table.key[done], vl[done], vr[done],
-                          ve[done])
+                          ve[done], self._first_ts[done])
             for slot in done:
                 self._evict(int(slot))
 
@@ -715,11 +852,12 @@ class FlowTableServer:
         sid[:s.size] = self._sid[s]
         pkt = np.zeros((cap, PKT_NFIELDS), np.float32)
         pkt[:s.size] = p
-        self._acc, self._seen = _fold_rank(
-            self._acc, self._seen, jnp.asarray(pkt), jnp.asarray(sid),
-            jnp.asarray(slots), self.engine.dev,
-            pallas=self._pallas, block_b=self._block_b)
-        self.stats.dispatches += 1
+        with span("tick/dispatch"):
+            self._acc, self._seen = _fold_rank(
+                self._acc, self._seen, jnp.asarray(pkt), jnp.asarray(sid),
+                jnp.asarray(slots), self.engine.dev,
+                pallas=self._pallas, block_b=self._block_b)
+            self.stats.dispatches += 1
 
     def _hop_drain(self, s: np.ndarray, out: _VerdictAccum) -> None:
         """Hop the completed slots; drain any windows that complete
@@ -735,15 +873,19 @@ class FlowTableServer:
             p_rows[:s.size] = self._part[s]
             rec = np.zeros(cap, np.int32)
             rec[:s.size] = self._recircs[s]
-            res = _hop_rank(
-                self._acc, self._seen, jnp.asarray(slots),
-                jnp.asarray(sid), jnp.asarray(p_rows), jnp.asarray(rec),
-                self.engine.dev, n_subtrees=self.S,
-                pallas=self._pallas, block_b=self._block_b)
-            self.stats.dispatches += 1
+            with span("tick/dispatch"):
+                res = _hop_rank(
+                    self._acc, self._seen, jnp.asarray(slots),
+                    jnp.asarray(sid), jnp.asarray(p_rows),
+                    jnp.asarray(rec),
+                    self.engine.dev, n_subtrees=self.S,
+                    pallas=self._pallas, block_b=self._block_b)
+                self.stats.dispatches += 1
             self._acc, self._seen = res[0], res[1]
-            labels, done, sid2, rec2, exit_p = (
-                np.asarray(a)[:s.size] for a in jax.device_get(res[2:]))
+            with span("tick/fetch"):
+                labels, done, sid2, rec2, exit_p = (
+                    np.asarray(a)[:s.size]
+                    for a in jax.device_get(res[2:]))
             done = done.astype(bool)
             # exits emit verdicts; flows falling off the last partition
             # emit -1 sentinels; the rest advance to the next window
@@ -751,7 +893,8 @@ class FlowTableServer:
             if fin.any():
                 out.add_batch(self.table.key[s[fin]],
                               np.where(done, labels, -1)[fin], rec2[fin],
-                              np.where(done, exit_p, -1)[fin])
+                              np.where(done, exit_p, -1)[fin],
+                              self._first_ts[s[fin]])
                 for slot in s[fin]:
                     self._evict(int(slot))
             sa = s[~fin]
@@ -775,7 +918,13 @@ class FlowTableServer:
                       for key in done}
         w_max = max(1, max(hi - lo for b in all_bounds.values()
                            for lo, hi in b))
-        wp = np.zeros((len(done), P, w_max, PKT_NFIELDS), np.float32)
+        # pad the flows axis to the pow2 capacity ladder: batch rows are
+        # independent in the walk, so the zero-filled tail is discarded
+        # below.  Without this, every distinct spill-batch size is a
+        # fresh XLA compile — a spill-heavy stream (tiny table) racks up
+        # one executable per tick and can OOM the compiler.
+        cap = _pow2_cap(len(done), 1)
+        wp = np.zeros((cap, P, w_max, PKT_NFIELDS), np.float32)
         for idx, key in enumerate(done):
             rows = np.stack(self._spill[key].rows)
             for w, (lo, hi) in enumerate(all_bounds[key]):
@@ -784,11 +933,21 @@ class FlowTableServer:
                 win = rows[lo:hi].copy()
                 win[0, PKT_IAT] = 0.0
                 wp[idx, w, :hi - lo] = win
-        res = self.engine.run(wp, with_trace=False,
-                              options=self._spill_options)
-        out.add_batch(np.asarray(done, np.int64), np.asarray(res.labels),
-                      np.asarray(res.recircs),
-                      np.asarray(res.exit_partition))
+        with span("tick/spill"):
+            res = self.engine.run(wp, with_trace=False,
+                                  options=self._spill_options)
+            # the batch walk is a jitted device call like any tick step;
+            # both tick engines share this path, so counting it keeps
+            # fused/legacy dispatch counts comparable (it was silently
+            # uncounted before, understating spill-heavy workloads)
+            self.stats.dispatches += 1
+        n = len(done)
+        first = np.asarray([self._spill[k].first_ts for k in done],
+                           np.float64)
+        out.add_batch(np.asarray(done, np.int64),
+                      np.asarray(res.labels)[:n],
+                      np.asarray(res.recircs)[:n],
+                      np.asarray(res.exit_partition)[:n], first)
         for key in done:
             del self._spill[key]
             self._retired.add(key)
@@ -799,13 +958,13 @@ class FlowTableServer:
         if stale.size:
             neg = np.full(stale.size, -1, np.int32)
             out.add_batch(self.table.key[stale], neg,
-                          self._recircs[stale], neg)
+                          self._recircs[stale], neg, self._first_ts[stale])
             for slot in stale:
                 self._evict(int(slot))
             self.stats.evicted += int(stale.size)
         for key, f in list(self._spill.items()):
             if now - f.last_ts > self.timeout:
-                out.add(key, -1, 0, -1)
+                out.add(key, -1, 0, -1, f.first_ts)
                 del self._spill[key]
                 self._retired.add(key)
                 self.stats.evicted += 1

@@ -57,6 +57,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
+from repro import obs
 from repro.core.inference import (
     _UNSET,
     Engine,
@@ -66,6 +67,7 @@ from repro.core.inference import (
     StepFn,
     _legacy_options,
     _partition_walk,
+    _record_walk,
     backend_for_plan,
     get_backend,
     pallas_backend,
@@ -235,10 +237,16 @@ def run_streaming(
     exit_partition = np.full(B, -1, dtype=np.int32)
     pending: list[tuple[int, int, tuple]] = []
 
+    reg = obs.get_registry()
+    chunk_counter = reg.counter(
+        "stream_chunks_total", "micro-batches dispatched by run_streaming",
+        labels={"backend": backend.name})
+
     def collect(keep: int) -> None:
         while len(pending) > keep:
             lo, hi, fut = pending.pop(0)
-            lab, rec, exi = jax.device_get(fut)
+            with obs.span("stream/fetch"):
+                lab, rec, exi = jax.device_get(fut)
             labels[lo:hi] = lab[:hi - lo]
             recircs[lo:hi] = rec[:hi - lo]
             exit_partition[lo:hi] = exi[:hi - lo]
@@ -256,9 +264,15 @@ def run_streaming(
             batch = jnp.asarray(pad_axis0(
                 np.ascontiguousarray(win_pkts[lo:hi, :P], dtype=np.float32),
                 mb))
-        pending.append((lo, hi, walk(batch, engine.dev)))
+        with obs.span("stream/dispatch"):
+            pending.append((lo, hi, walk(batch, engine.dev)))
+            chunk_counter.inc()
+            reg.counter("engine_dispatches_total",
+                        "jitted walk calls issued",
+                        labels={"backend": backend.name}).inc()
         collect(inflight - 1)
     collect(0)
+    _record_walk(exit_partition, P, compact=cpt, compact_floor=floor)
     return EngineResult(labels, recircs, exit_partition, [], plan=plan)
 
 

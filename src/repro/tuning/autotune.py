@@ -36,6 +36,7 @@ from typing import TYPE_CHECKING, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.kernels.compaction import COMPACT_FLOOR
 from repro.kernels.dt_traverse import BLOCK_B
 from repro.tuning.costmodel import (
@@ -286,6 +287,7 @@ def autotune(
     key = cache_key(shape, streaming=streaming, compact=compact,
                     backends=backends)
 
+    reg_obs = obs.get_registry()
     mkey = (path or cache_path(), key)
     entries = load_cache(path) if cache else {}
     if cache and not force:
@@ -293,7 +295,11 @@ def autotune(
         if hit is None:
             hit = _winner_memo.get(mkey)
         if hit is not None and hit.backend in backends:
+            reg_obs.counter("tune_cache_hits_total",
+                            "autotune calls served from cache").inc()
             return hit
+    reg_obs.counter("tune_cache_misses_total",
+                    "autotune calls not served from cache").inc()
 
     if not _timing_allowed(allow_timing):
         return choose_plan(shape, backends=backends,
@@ -307,7 +313,15 @@ def autotune(
         key=lambda p: estimate_us(shape, p))
     best_plan, best_us = None, float("inf")
     for plan in ranked[:max(shortlist, 1)]:
-        us = time_plan(engine, probe, plan, repeat=repeat)
+        with obs.span("tune/probe"):
+            us = time_plan(engine, probe, plan, repeat=repeat)
+        reg_obs.counter("tune_probes_total", "timed probe runs",
+                        labels={"backend": plan.backend}).inc()
+        if obs.enabled():
+            reg_obs.histogram(
+                "tune_probe_us", "probe outcome (median us/call)",
+                edges=obs.exp_edges(10.0, 1e7, 13),
+                labels={"backend": plan.backend}).record(us)
         if us < best_us:
             best_plan, best_us = plan, us
     winner = dataclasses.replace(best_plan, source="timed",

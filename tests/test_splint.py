@@ -170,6 +170,44 @@ def test_r008_fires_on_zero_sentinel():
     assert codes(ok) == []
 
 
+def test_r009_fires_on_host_timer_under_jit():
+    src = (
+        "import time\nimport jax\n"
+        "@jax.jit\n"
+        "def root(x):\n"
+        "    return helper(x)\n"
+        "def helper(x):\n"
+        "    t0 = time.perf_counter()\n"
+        "    return x, time.time() - t0\n")
+    assert codes(src, KPATH).count("R009") == 2
+
+
+def test_r009_fires_on_obs_span_under_jit():
+    src = (
+        "import jax\nfrom repro import obs\n"
+        "@jax.jit\n"
+        "def root(x):\n"
+        "    with obs.span('walk'):\n"
+        "        return x + 1\n")
+    assert codes(src, KPATH) == ["R009"]
+
+
+def test_r009_clean_on_host_side_timing():
+    """Timing AROUND the dispatch (the obs pattern) is the blessed
+    shape: the timed function is not jit-reachable."""
+    src = (
+        "import time\nimport jax\nfrom repro import obs\n"
+        "@jax.jit\n"
+        "def step(x):\n"
+        "    return x * 2\n"
+        "def serve(x):\n"
+        "    t0 = time.perf_counter()\n"
+        "    with obs.span('tick/dispatch'):\n"
+        "        y = step(x)\n"
+        "    return y, time.perf_counter() - t0\n")
+    assert codes(src, KPATH) == []
+
+
 # ---------------------------------------------------------------------------
 # suppression pragmas
 # ---------------------------------------------------------------------------
@@ -282,7 +320,7 @@ def test_fixed_snippet_respects_pragmas():
 # ---------------------------------------------------------------------------
 
 def test_every_rule_registered_with_doc():
-    assert sorted(RULES) == [f"R00{i}" for i in range(1, 9)]
+    assert sorted(RULES) == [f"R00{i}" for i in range(1, 10)]
     for r in RULES.values():
         assert r.doc and r.name
 

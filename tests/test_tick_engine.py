@@ -198,8 +198,40 @@ def test_tick_engines_bit_identical(tick_setup, impl):
     np.testing.assert_array_equal(a.recircs[oa], b.recircs[ob])
     np.testing.assert_array_equal(a.exit_partition[oa],
                                   b.exit_partition[ob])
-    # same admission story: stats besides dispatch counts agree
-    for f in ("packets", "flows_seen", "verdicts", "spilled", "evicted",
-              "peak_resident", "ticks"):
+    # same admission story: EVERY stats field except the dispatch count
+    # (the engines' whole difference) agrees
+    from repro.serve import ServerStats
+    for f in ServerStats.FIELDS:
+        if f == "dispatches":
+            continue
         assert getattr(sa, f) == getattr(sb, f), f
     assert sa.dispatches < sb.dispatches  # the whole point
+
+
+def test_tick_engines_stats_agree_under_spill_and_timeout(tick_setup):
+    """The stats-drift audit bar: a tiny table (constant spill traffic)
+    plus an aggressive timeout (eviction sentinels) exercises every
+    counter-update path — fused and legacy must still agree on all
+    stats fields, including the spill-run dispatches both engines now
+    count identically."""
+    eng, tr, stream = tick_setup
+    from repro.serve import ServerStats
+    outs = {}
+    for te in ("fused", "legacy"):
+        srv = FlowTableServer(eng, n_buckets=2, bucket_size=2,
+                              tick_engine=te, timeout=0.005)
+        parts = [srv.ingest(b) for b in stream.ticks(131)]
+        parts.append(srv.flush())
+        outs[te] = (StreamVerdicts.concat(parts), srv.stats)
+    a, sa = outs["fused"]
+    b, sb = outs["legacy"]
+    assert sa.spilled > 0          # the tiny table forced the host path
+    assert sa.evicted > 0          # the timeout fired
+    oa, ob = np.argsort(a.flow_id), np.argsort(b.flow_id)
+    np.testing.assert_array_equal(a.flow_id[oa], b.flow_id[ob])
+    np.testing.assert_array_equal(a.labels[oa], b.labels[ob])
+    for f in ServerStats.FIELDS:
+        if f == "dispatches":
+            continue
+        assert getattr(sa, f) == getattr(sb, f), f
+    assert sa.dispatches < sb.dispatches

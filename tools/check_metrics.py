@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Schema-check the observability artifacts the benches emit.
+
+    python tools/check_metrics.py METRICS_serve.json [--kind serve]
+    python tools/check_metrics.py METRICS_engine.json --kind engine
+
+``benchmarks/bench_serve.py`` writes ``METRICS_serve.json`` (one
+``MetricRegistry.snapshot()`` per timed grid cell) and
+``benchmarks/bench_engine.py`` writes ``METRICS_engine.json`` (one
+registry for the whole run).  CI uploads both; this check fails the
+bench-smoke job when a required metric goes missing — i.e. when
+someone unhooks the instrumentation the paper's evaluation numbers
+(TTD, recirc overhead, dispatch counts) are derived from.  The metric
+catalogue lives in ``docs/OBSERVABILITY.md``.
+
+Required per serve cell:
+  * histogram ``serve_ttd_seconds`` with a non-zero sample total,
+  * gauge ``serve_recirc_overhead``,
+  * counters ``serve_dispatches_total`` and ``serve_packets_total``,
+    both non-zero.
+
+Required for the engine registry: at least one
+``engine_dispatches_total{backend=...}`` counter with a non-zero
+value, and at least one ``engine_hop_survivors_total{hop=...}``.
+
+Exit status: 0 clean, 1 with a report of every violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SERVE_COUNTERS = ("serve_dispatches_total", "serve_packets_total")
+
+
+def _names(section: dict) -> set[str]:
+    """Metric names with any label suffix stripped."""
+    return {k.split("{", 1)[0] for k in section}
+
+
+def check_serve_cell(name: str, snap: dict) -> list[str]:
+    errors = []
+    hists = snap.get("histograms", {})
+    ttd = hists.get("serve_ttd_seconds")
+    if ttd is None:
+        errors.append(f"{name}: missing histogram serve_ttd_seconds")
+    elif ttd.get("total", 0) <= 0:
+        errors.append(f"{name}: serve_ttd_seconds recorded no samples")
+    if "serve_recirc_overhead" not in _names(snap.get("gauges", {})):
+        errors.append(f"{name}: missing gauge serve_recirc_overhead")
+    counters = snap.get("counters", {})
+    for c in SERVE_COUNTERS:
+        if c not in counters:
+            errors.append(f"{name}: missing counter {c}")
+        elif counters[c].get("value", 0) <= 0:
+            errors.append(f"{name}: counter {c} is zero")
+    return errors
+
+
+def check_serve(payload: dict) -> list[str]:
+    cells = payload.get("cells", {})
+    if not cells:
+        return ["no cells in serve metrics payload"]
+    errors = []
+    for name, snap in sorted(cells.items()):
+        errors.extend(check_serve_cell(name, snap))
+    return errors
+
+
+def check_engine(payload: dict) -> list[str]:
+    reg = payload.get("registry", {})
+    counters = reg.get("counters", {})
+    errors = []
+    disp = {k: v for k, v in counters.items()
+            if k.startswith("engine_dispatches_total")}
+    if not disp:
+        errors.append("no engine_dispatches_total counters")
+    elif not any(v.get("value", 0) > 0 for v in disp.values()):
+        errors.append("every engine_dispatches_total counter is zero")
+    if not any(k.startswith("engine_hop_survivors_total")
+               for k in counters):
+        errors.append("no engine_hop_survivors_total counters")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="metrics JSON artifact to check")
+    ap.add_argument("--kind", choices=("serve", "engine"), default=None,
+                    help="artifact flavour (default: the payload's "
+                         "'bench' field)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.path, encoding="utf-8") as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"check_metrics: cannot read {args.path}: {e}")
+        return 1
+    kind = args.kind or payload.get("bench")
+    if kind == "serve":
+        errors = check_serve(payload)
+    elif kind == "engine":
+        errors = check_engine(payload)
+    else:
+        errors = [f"unknown artifact kind {kind!r} (pass --kind)"]
+    if errors:
+        print("\n".join(errors))
+        print(f"check_metrics: {args.path}: {len(errors)} violation(s)")
+        return 1
+    n = len(payload.get("cells", {})) or 1
+    print(f"check_metrics: {args.path}: {kind} artifact clean ({n} cell(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

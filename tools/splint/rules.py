@@ -11,6 +11,7 @@ pointwise (docs/ANALYSIS.md has the full rationale table):
   R006  no python branching on tracers ConcretizationError hazard
   R007  no donated-buffer reuse        donate_argnums semantics
   R008  -1 sentinel discipline         docs/PARITY.md §2
+  R009  no host timing under jit       docs/OBSERVABILITY.md (R009)
 
 Scoping: every rule skips the LM prototype tree
 (``core.EXCLUDED_TREES``); R001 additionally restricts itself to the
@@ -495,3 +496,47 @@ def check_r008(ctx: LintContext):
                 ctx, node.value, "R008",
                 f"`{node.arg}=0` — verdict fields use the -1 sentinel "
                 "for 'no verdict' (PARITY.md §2)")
+
+
+# ---------------------------------------------------------------------------
+# R009 — no host timers / obs spans inside jit-reachable code
+# ---------------------------------------------------------------------------
+
+_R009_TIMERS = {"time.time", "time.perf_counter", "time.perf_counter_ns",
+                "time.monotonic", "time.monotonic_ns", "time.process_time",
+                "perf_counter", "monotonic"}
+_R009_SPANS = {"span", "obs.span", "trace.span", "obs.trace.span",
+               "repro.obs.span"}
+
+
+@rule("R009", "no-host-timing-under-jit",
+      "time.time/time.perf_counter and repro.obs span() entries inside "
+      "a @jax.jit function (or a helper reachable from one) run ONCE at "
+      "trace time, not per call — the 'timing' silently measures "
+      "tracing, and the span brackets nothing. Time and annotate at the "
+      "dispatch site on the host (docs/OBSERVABILITY.md).",
+      applies=lambda ctx: True)
+def check_r009(ctx: LintContext):
+    graph = callgraph.build(ctx.tree)
+    for name in sorted(graph.reachable):
+        fn = graph.functions.get(name)
+        if fn is None:
+            continue
+        for node in _walk_own(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain in _R009_TIMERS:
+                yield _diag(
+                    ctx, node, "R009",
+                    f"`{chain}()` inside jit-reachable `{name}` reads "
+                    "the host clock at TRACE time — it times tracing "
+                    "once, not execution; hoist the timing to the "
+                    "dispatch call site")
+            elif chain in _R009_SPANS:
+                yield _diag(
+                    ctx, node, "R009",
+                    f"obs span `{chain}(...)` inside jit-reachable "
+                    f"`{name}` brackets trace time, not device "
+                    "execution; open the span around the jitted CALL "
+                    "instead (jax.named_scope is the in-trace marker)")
